@@ -1,0 +1,144 @@
+"""Shared benchmark infrastructure: the calibrated COIN energy pipeline.
+
+Absolute-joule calibration (DESIGN.md §9): one global NoC energy scale is
+fixed so the paper's headline point — Cora on the 4×4 mesh consumes 2.7 µJ
+of communication energy (§V-D) — is matched exactly; one compute constant
+(J/MAC, covering crossbar+ADC+accumulator) is fixed so Cora's total COIN
+energy is 0.05 mJ (Table IV). Everything else is a *prediction* of the
+model; tables report model vs paper side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+from repro.core.dataflow import dense_multiply_count
+from repro.core.energy import CoinEnergyModel
+from repro.core.noc import CMeshNoC, MeshNoC, TrafficSummary, baseline_broadcast_summary
+from repro.core.partition import Partition, measured_probabilities, partition_graph
+from repro.graph.generators import TABLE_I, citation_like
+
+ACT_BITS = 4          # §V-B: 4-bit activations
+HIDDEN = 16           # Kipf–Welling hidden width (paper's Nell example)
+A2_BITS = HIDDEN * ACT_BITS   # a(2) = 64 bits/node exchanged at the layer boundary
+
+# Calibration targets from the paper.
+CORA_COMM_TARGET_J = 2.7e-6        # §V-D: Cora 4×4 comm energy
+CORA_TOTAL_TARGET_J = 0.05e-3      # Table IV: Cora COIN total energy
+
+
+@dataclasses.dataclass
+class DatasetEnergy:
+    name: str
+    comm_j: float
+    compute_j: float
+    latency_s: float
+    summary: TrafficSummary
+    part: Partition
+
+    @property
+    def total_j(self) -> float:
+        return self.comm_j + self.compute_j
+
+    @property
+    def comm_pct(self) -> float:
+        return 100.0 * self.comm_j / self.total_j
+
+    @property
+    def edp(self) -> float:
+        return self.total_j * self.latency_s
+
+
+@functools.lru_cache(maxsize=None)
+def dataset_partition(name: str, k: int = 16, method: str = "bfs") -> Partition:
+    spec = TABLE_I[name]
+    g = citation_like(spec.n_nodes, spec.n_edges, None, spec.n_labels, seed=0)
+    return partition_graph(g.n_nodes, g.edge_index, k, method=method, seed=0, refine=True)
+
+
+def dataset_macs(name: str) -> float:
+    """Feature-first dense MAC count (the paper's crossbar accounting)."""
+    spec = TABLE_I[name]
+    dims = [spec.n_features, HIDDEN, spec.n_labels]
+    total = 0.0
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        total += dense_multiply_count(spec.n_nodes, d_in, d_out).feature_first
+    return total
+
+
+@functools.lru_cache(maxsize=1)
+def calibration() -> tuple[float, float]:
+    """(noc_energy_scale, j_per_mac) from the two Cora anchors."""
+    noc = MeshNoC(4, 4)
+    part = dataset_partition("cora")
+    raw = _comm_energy(noc, part, broadcast=True)
+    scale = CORA_COMM_TARGET_J / raw
+    macs = dataset_macs("cora")
+    j_per_mac = (CORA_TOTAL_TARGET_J - CORA_COMM_TARGET_J) / macs
+    return scale, j_per_mac
+
+
+def _comm_energy(noc: MeshNoC, part: Partition, broadcast: bool) -> float:
+    inter = part.inter_ce_traffic_bits(A2_BITS, broadcast=broadcast)
+    e_inter, _ = noc.energy_for_traffic(inter)
+    intra = part.intra_ce_traffic_bits(A2_BITS)
+    e_intra = noc.intra_ce_energy(intra, part.n_nodes / part.k)
+    return e_inter + e_intra
+
+
+def calibrated_noc(k: int = 16, cmesh: bool = False) -> MeshNoC:
+    scale, _ = calibration()
+    cls = CMeshNoC if cmesh else MeshNoC
+    return cls.square(k).calibrated(scale)
+
+
+def coin_energy(name: str, k: int = 16, broadcast: bool = True, cmesh: bool = False) -> DatasetEnergy:
+    """Full COIN energy/latency for one dataset on a k-CE chip."""
+    noc = calibrated_noc(k, cmesh=cmesh)
+    part = dataset_partition(name, k)
+    comm = _comm_energy(noc, part, broadcast)
+    inter = part.inter_ce_traffic_bits(A2_BITS, broadcast=broadcast)
+    summary = noc.summarize(inter)
+    _, j_per_mac = calibration()
+    compute = dataset_macs(name) * j_per_mac
+    # Compute latency: crossbars operate column-parallel at 1 GHz with
+    # bit-serial inputs; per-layer latency dominated by input streaming —
+    # modeled as MACs / (parallel crossbar lanes).
+    lanes = 16 * 30 * 16 * 128.0  # CEs × tiles × PEs × rows
+    compute_s = dataset_macs(name) / lanes / noc.freq_hz * ACT_BITS
+    return DatasetEnergy(
+        name=name,
+        comm_j=comm,
+        compute_j=compute,
+        latency_s=summary.latency_s + compute_s,
+        summary=summary,
+        part=part,
+    )
+
+
+def baseline_energy(name: str) -> DatasetEnergy:
+    """The paper's baseline: one CE per GCN node on a √N×√N mesh NoC."""
+    spec = TABLE_I[name]
+    scale, j_per_mac = calibration()
+    side = int(np.ceil(np.sqrt(spec.n_nodes)))
+    noc = MeshNoC(side, side).calibrated(scale)
+    s = baseline_broadcast_summary(noc, spec.n_nodes, A2_BITS)
+    compute = dataset_macs(name) * j_per_mac
+    part = dataset_partition(name)      # reused only for bookkeeping
+    return DatasetEnergy(
+        name=name, comm_j=s.energy_j, compute_j=compute,
+        latency_s=s.latency_s, summary=s, part=part,
+    )
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """(result, microseconds per call)."""
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us

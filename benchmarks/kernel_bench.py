@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle vs the
+segment-sum system path. On CPU interpret-mode timing measures correctness
+plumbing, not TPU perf — TPU perf comes from the §Roofline analysis — but the
+harness rows keep the kernels exercised end-to-end in `benchmarks.run`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.graph.ops import aggregate
+from repro.graph.structure import blocked_adjacency
+from repro.kernels.ops import bsr_spmm, flash_attention, fm_interaction
+from repro.kernels.ref import bsr_spmm_ref, flash_attention_ref, fm_interaction_ref
+
+
+def kernel_rows():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # bsr_spmm on a Cora-sized blocked adjacency
+    n, e, f = 2708, 10556, 128
+    ei = rng.integers(0, n, size=(2, e)).astype(np.int32)
+    ba = blocked_adjacency(n, ei, block=128)
+    vals, cols = jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols)
+    z = jnp.asarray(rng.standard_normal((ba.n_padded, f)), jnp.float32)
+    out_k, us_k = timed(lambda: jax.block_until_ready(bsr_spmm(vals, cols, z)), repeat=2)
+    out_r, us_r = timed(lambda: jax.block_until_ready(bsr_spmm_ref(vals, cols, z)), repeat=2)
+    _, us_s = timed(
+        lambda: jax.block_until_ready(
+            aggregate(z[:n], jnp.asarray(ei[0]), jnp.asarray(ei[1]), n)
+        ),
+        repeat=2,
+    )
+    err = float(jnp.abs(out_k - out_r).max())
+    rows.append(("kernel/bsr_spmm_interp", us_k, f"ref_us={us_r:.0f} segsum_us={us_s:.0f} err={err:.1e}"))
+
+    # fm_interaction at the deepfm train shape (downscaled batch)
+    emb = jnp.asarray(rng.standard_normal((4096, 39, 10)), jnp.float32)
+    out_k, us_k = timed(lambda: jax.block_until_ready(fm_interaction(emb)), repeat=2)
+    out_r, us_r = timed(lambda: jax.block_until_ready(fm_interaction_ref(emb)), repeat=2)
+    err = float(jnp.abs(out_k - out_r).max())
+    rows.append(("kernel/fm_interaction_interp", us_k, f"ref_us={us_r:.0f} err={err:.1e}"))
+
+    # flash attention (small, causal + window)
+    q = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    out_k, us_k = timed(lambda: jax.block_until_ready(flash_attention(q, k, v, window=128)), repeat=1)
+    out_r, us_r = timed(lambda: jax.block_until_ready(flash_attention_ref(q, k, v, window=128)), repeat=1)
+    err = float(jnp.abs(out_k - out_r).max())
+    rows.append(("kernel/flash_attention_interp", us_k, f"ref_us={us_r:.0f} err={err:.1e}"))
+    return rows

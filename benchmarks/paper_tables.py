@@ -1,0 +1,104 @@
+"""Paper tables: optimal k (§IV-B3), dataflow multiplies (§IV-C3),
+chips required (§V-C), accelerator comparisons (Tables IV/VI/VII)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import coin_energy, timed
+from repro.core.chip import ChipModel, chips_required
+from repro.core.dataflow import dense_multiply_count
+from repro.core.energy import model_from_gcn
+from repro.core.solver import optimal_ce_count
+from repro.graph.generators import TABLE_I
+
+HIDDEN = 16
+
+
+def tbl_optimal_k():
+    """§IV-B3: interior-point solve per dataset; paper picks 4×4 overall
+    ('least communication energy for most of the dataset'), 10 ms solve."""
+    rows = []
+    for name, spec in TABLE_I.items():
+        m = model_from_gcn(spec.n_nodes, [spec.n_features, HIDDEN, spec.n_labels], 4)
+        res, us = timed(optimal_ce_count, m, repeat=3)
+        rows.append(
+            (f"optk/{name}", us,
+             f"k*={res.k_star:.1f} mesh={res.mesh_shape[0]}x{res.mesh_shape[1]} "
+             f"solve_ms={res.solve_ms:.2f} (paper: 10ms, 4x4)")
+        )
+    m6000 = model_from_gcn(6000, [1433, HIDDEN, 7], 4)
+    res = optimal_ce_count(m6000)
+    rows.append(("optk/N6000_fig19", 0.0,
+                 f"k*={res.k_star:.2f} mesh={res.mesh_shape} (paper: 16 = 4x4)"))
+    return rows
+
+
+def tbl_dataflow():
+    """§IV-C3: multiply counts, aggregation-first vs feature-first."""
+    rows = []
+    for name, spec in TABLE_I.items():
+        c = dense_multiply_count(spec.n_nodes, spec.n_features, HIDDEN)
+        rows.append(
+            (f"dataflow/{name}", 0.0,
+             f"agg_first={c.aggregation_first:.3g} feat_first={c.feature_first:.3g} "
+             f"reduction={c.reduction:.0f}x")
+        )
+    nell = dense_multiply_count(65755, 5414, 16)
+    rows.append(("dataflow/nell_paper_check", 0.0,
+                 f"2.3e13 vs {nell.aggregation_first:.2g}; 7.4e10 vs "
+                 f"{nell.feature_first:.2g}; 311x vs {nell.reduction:.0f}x"))
+    return rows
+
+
+def tbl_chips():
+    """§V-C: chips required (paper: 1/1/3/20/45)."""
+    paper = {"cora": 1, "citeseer": 1, "pubmed": 3, "extcora": 20, "nell": 45}
+    cm = ChipModel()
+    rows = []
+    for name, spec in TABLE_I.items():
+        dims = [spec.n_features, HIDDEN, spec.n_labels]
+        xb = chips_required(cm, spec.n_nodes, dims, mode="crossbar")
+        cell = chips_required(cm, spec.n_nodes, dims, mode="cell")
+        rows.append(
+            (f"chips/{name}", 0.0,
+             f"crossbar={xb} cell={cell} paper={paper[name]}")
+        )
+    return rows
+
+
+# Published numbers (the comparison baselines the paper measures against).
+_RTX8000 = {  # Table IV: energy mJ, latency ms
+    "cora": (62.2, 1.22), "citeseer": (90.50, 1.22), "pubmed": (89.1, 1.22),
+    "extcora": (1787.3, 7.45), "nell": (1504.0, 14.94),
+}
+_AWB_32NM = {"cora": 5.27, "citeseer": 8.54, "pubmed": 73.0, "nell": 1020.0}  # mJ
+_COIN_PAPER = {  # Table IV: COIN energy mJ / latency ms
+    "cora": (0.05, 0.6), "citeseer": (0.10, 1.10), "pubmed": (38.13, 0.57),
+    "extcora": (257.4, 9.96), "nell": (577.1, 1.04),
+}
+
+
+def tbl_accel_compare():
+    """Tables IV/VI/VII: our modeled COIN numbers next to the published COIN
+    and baseline-accelerator numbers; improvement factors recomputed."""
+    rows = []
+    for name in TABLE_I:
+        c = coin_energy(name)
+        model_mj = c.total_j * 1e3
+        paper_mj, paper_ms = _COIN_PAPER[name]
+        rtx_mj, rtx_ms = _RTX8000[name]
+        rows.append(
+            (f"tbl4/{name}", 0.0,
+             f"model_COIN_mJ={model_mj:.3g} paper_COIN_mJ={paper_mj} "
+             f"RTX_mJ={rtx_mj} impr_vs_RTX(paper_basis)={rtx_mj / paper_mj:.0f}x "
+             f"impr_vs_RTX(model_basis)={rtx_mj / max(model_mj, 1e-12):.0f}x")
+        )
+    for name, awb in _AWB_32NM.items():
+        paper_mj, _ = _COIN_PAPER[name]
+        c = coin_energy(name)
+        rows.append(
+            (f"tbl6/{name}", 0.0,
+             f"AWB32nm_mJ={awb} COIN_paper_mJ={paper_mj} impr_paper={awb / paper_mj:.3g}x "
+             f"impr_model={awb / max(c.total_j * 1e3, 1e-12):.3g}x (paper headline: Cora 105x)")
+        )
+    return rows

@@ -1,0 +1,82 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from the
+dry-run sweep (results/dryrun.json) and emit the markdown EXPERIMENTS.md
+consumes. Terms per the assignment:
+
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("µs", 1e-6), ("ns", 1e-9)):
+        if x >= scale:
+            return f"{x / scale:.3g}{unit}"
+    return f"{x:.2e}s"
+
+
+def roofline_rows(mesh: str = "16x16", path: str = RESULTS):
+    rows = []
+    for r in load(path):
+        if r["mesh"] != mesh:
+            continue
+        name = f"roofline/{r['arch']}×{r['shape']}"
+        if r["status"] == "SKIP":
+            rows.append((name, 0.0, f"SKIP({r['reason'][:60]})"))
+            continue
+        if r["status"] != "OK":
+            rows.append((name, 0.0, f"FAIL({r.get('error', '')[:60]})"))
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        rows.append(
+            (name, 0.0,
+             f"compute={fmt_s(rf['compute_s'])} memory={fmt_s(rf['memory_s'])} "
+             f"collective={fmt_s(rf['collective_s'])} dominant={rf['dominant']} "
+             f"useful_flops_ratio={ur:.3g}" if ur else
+             f"compute={fmt_s(rf['compute_s'])} memory={fmt_s(rf['memory_s'])} "
+             f"collective={fmt_s(rf['collective_s'])} dominant={rf['dominant']}")
+        )
+    return rows
+
+
+def markdown_table(mesh: str = "16x16", path: str = RESULTS) -> str:
+    lines = [
+        f"| arch | shape | kind | compute | memory | collective | dominant | useful-FLOPs ratio | peak bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(load(path), key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "SKIP":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP | — | — |")
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | FAIL | — | — |")
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        peak = (r.get("memory") or {}).get("peak_bytes")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {fmt_s(rf['compute_s'])} "
+            f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {f'{ur:.3g}' if ur else '—'} | {f'{peak/1e9:.2f} GB' if peak else '—'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,80 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract). Fast by default;
+``--full`` adds the slower quantization sweep over more datasets and the
+roofline rows for the multi-pod mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on benchmark name")
+    args = ap.parse_args(argv)
+
+    from benchmarks.fig07_quant import fig07_quant_accuracy
+    from benchmarks.kernel_bench import kernel_rows
+    from benchmarks.paper_figs import (
+        fig01_baseline_comm,
+        fig09_mesh_sweep,
+        fig10_11_energy_vs_baseline,
+        fig12_cmesh,
+        fig13_edp,
+        halo_vs_broadcast,
+        tbl3_comm_fraction,
+    )
+    from benchmarks.paper_tables import (
+        tbl_accel_compare,
+        tbl_chips,
+        tbl_dataflow,
+        tbl_optimal_k,
+    )
+    from benchmarks.roofline import roofline_rows
+
+    suites = [
+        ("fig01", fig01_baseline_comm),
+        ("optk", tbl_optimal_k),
+        ("dataflow", tbl_dataflow),
+        ("fig09", fig09_mesh_sweep),
+        ("fig10/11", fig10_11_energy_vs_baseline),
+        ("fig12", fig12_cmesh),
+        ("fig13", fig13_edp),
+        ("tbl3", tbl3_comm_fraction),
+        ("halo", halo_vs_broadcast),
+        ("chips", tbl_chips),
+        ("tbl4/6/7", tbl_accel_compare),
+        ("kernels", kernel_rows),
+        ("fig07", lambda: fig07_quant_accuracy(
+            datasets=("cora", "citeseer", "pubmed") if args.full else ("cora",),
+            epochs=120,
+        )),
+        ("roofline-16x16", lambda: roofline_rows("16x16")),
+    ]
+    if args.full:
+        suites.append(("roofline-2x16x16", lambda: roofline_rows("2x16x16")))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in suites:
+        if args.only and args.only not in label:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except FileNotFoundError as e:
+            print(f"{label},0.0,SKIPPED({e})")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{label},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

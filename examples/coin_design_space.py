@@ -1,0 +1,46 @@
+"""Design-space exploration example: the COIN objective at chip scale (the
+paper's Fig. 9/19) AND re-targeted to a TPU pod (DESIGN.md §2) — shows how
+the same communication-balance criterion picks both the 4×4 CE mesh and the
+model-parallel degree for the distributed GCN.
+
+    PYTHONPATH=src python examples/coin_design_space.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.energy import model_from_gcn
+from repro.core.planner import plan_gnn_sharding
+from repro.core.solver import SQUARE_MESHES, mesh_sweep, optimal_ce_count
+from repro.graph.generators import TABLE_I
+
+
+def main() -> None:
+    print("== chip scale: CE-count sweep (paper Fig. 9) ==")
+    for name, spec in TABLE_I.items():
+        m = model_from_gcn(spec.n_nodes, [spec.n_features, 16, spec.n_labels], 4)
+        sweep = mesh_sweep(m)
+        best = min(sweep, key=sweep.get)
+        side = int(np.sqrt(best))
+        res = optimal_ce_count(m)
+        norm = {k: v / max(sweep.values()) for k, v in sweep.items()}
+        bar = " ".join(f"{k}:{norm[k]:.2f}" for k in SQUARE_MESHES)
+        print(f"  {name:9s} best={side}x{side} k*={res.k_star:5.1f}  E/Emax: {bar}")
+
+    print("\n== pod scale: model-parallel degree via the same objective ==")
+    for name, spec in TABLE_I.items():
+        for schedule in ("broadcast", "halo"):
+            plan = plan_gnn_sharding(
+                spec.n_nodes, spec.n_edges, [spec.n_features, 16, spec.n_labels],
+                n_devices=256, schedule=schedule,
+                cut_fraction=0.3 if schedule == "halo" else None,
+            )
+            print(f"  {name:9s} [{schedule:9s}] model={plan.model_shards:3d} "
+                  f"data={plan.data_shards:3d} est_step={plan.est_step_s*1e6:7.1f}µs "
+                  f"dominant={plan.dominant}")
+
+
+if __name__ == "__main__":
+    main()

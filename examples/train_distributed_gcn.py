@@ -1,0 +1,80 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param GraphCast
+on synthetic data for a few hundred steps with the full production substrate —
+Trainer (jit step, checkpointing, straggler monitor), AdamW, gradient
+compression, crash + resume.
+
+    PYTHONPATH=src python examples/train_distributed_gcn.py [--steps 300]
+
+~100M params: GraphCast d_hidden=512, 16 layers → ≈ 102M weights. On CPU this
+runs a reduced width by default; pass --full for the real 100M config.
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.generators import citation_like
+from repro.models.graphcast import GraphCastConfig, graphcast_init, graphcast_loss
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import adamw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true", help="use the real ~100M config")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = (
+        GraphCastConfig(n_layers=16, d_hidden=512, n_vars=64, d_in=64)
+        if args.full
+        else GraphCastConfig(n_layers=4, d_hidden=96, n_vars=32, d_in=32)
+    )
+    params = graphcast_init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    print(f"model: graphcast {cfg.n_layers}L d={cfg.d_hidden} → {n_params/1e6:.1f}M params")
+
+    g = citation_like(2048, 16384, seed=0)
+    senders = jnp.asarray(g.edge_index[0])
+    receivers = jnp.asarray(g.edge_index[1])
+    edge_feats = jnp.asarray(
+        np.random.default_rng(0).standard_normal((g.n_edges, cfg.d_edge_in)), jnp.float32
+    )
+
+    def loss_fn(params, batch):
+        return graphcast_loss(
+            params, batch["x"], edge_feats, senders, receivers, batch["y"], cfg
+        )
+
+    rng = np.random.default_rng(1)
+
+    def batches():
+        while True:
+            x = jnp.asarray(rng.standard_normal((g.n_nodes, cfg.input_dim)), jnp.float32)
+            # Learnable synthetic target: smooth function of the input.
+            y = jnp.tanh(x @ jnp.ones((cfg.input_dim, cfg.n_vars)) * 0.1)
+            yield {"x": x, "y": y}
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="coin_ckpt_")
+    tr = Trainer(
+        loss_fn,
+        adamw(3e-4),
+        params,
+        TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=50, log_every=25, compress_grads=True),
+    )
+    resumed = tr.resume()
+    print(f"checkpoints → {ckpt_dir} (resumed={resumed}, step={tr.step})")
+    losses = tr.fit(batches(), max_steps=args.steps)
+    print(f"done: step={tr.step} loss {losses[0]:.4f} → {losses[-1]:.4f}; "
+          f"stragglers observed: {len(tr.straggler_events)}")
+    assert losses[-1] < losses[0], "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

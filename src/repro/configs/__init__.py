@@ -1,0 +1,9 @@
+"""Architecture configs: one module per assigned architecture + the paper's.
+
+``get_arch(arch_id)`` returns an :class:`repro.configs.registry.ArchSpec`;
+``ALL_ARCHS`` lists the 10 assigned ids (plus "coin_gcn", the paper's own).
+"""
+
+from repro.configs.registry import ArchSpec, ShapeSpec, get_arch, ALL_ARCHS, ASSIGNED_ARCHS
+
+__all__ = ["ArchSpec", "ShapeSpec", "get_arch", "ALL_ARCHS", "ASSIGNED_ARCHS"]

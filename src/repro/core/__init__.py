@@ -1,0 +1,46 @@
+"""COIN core: the paper's contribution as composable JAX/numpy modules."""
+
+from repro.core.energy import CoinEnergyModel, sum_hidden_activation_bits
+from repro.core.solver import interior_point_minimize, optimal_ce_count, mesh_sweep
+from repro.core.partition import (
+    Partition,
+    partition_graph,
+    measured_probabilities,
+)
+from repro.core.noc import MeshNoC, CMeshNoC, TrafficSummary, gcn_layer_traffic
+from repro.core.dataflow import (
+    DataflowCost,
+    dense_multiply_count,
+    sparse_multiply_count,
+    choose_order,
+)
+from repro.core.chip import ChipModel, chips_required
+from repro.core.quant import fake_quant, quantize_tree, QuantConfig
+from repro.core.planner import TPUPlan, plan_gnn_sharding, coin_objective_tpu
+
+__all__ = [
+    "CoinEnergyModel",
+    "sum_hidden_activation_bits",
+    "interior_point_minimize",
+    "optimal_ce_count",
+    "mesh_sweep",
+    "Partition",
+    "partition_graph",
+    "measured_probabilities",
+    "MeshNoC",
+    "CMeshNoC",
+    "TrafficSummary",
+    "gcn_layer_traffic",
+    "DataflowCost",
+    "dense_multiply_count",
+    "sparse_multiply_count",
+    "choose_order",
+    "ChipModel",
+    "chips_required",
+    "fake_quant",
+    "quantize_tree",
+    "QuantConfig",
+    "TPUPlan",
+    "plan_gnn_sharding",
+    "coin_objective_tpu",
+]

@@ -1,0 +1,74 @@
+"""COIN dataflow: feature-extraction-first matmul reordering (paper §IV-C3).
+
+A GCN layer computes O = A · X · W (A: N×N adjacency, X: N×F features,
+W: F×H weights). The multiplication order changes the work:
+
+  aggregation-first   : (A·X)·W  → N·N·F + N·F·H multiplies
+  feature-first (COIN): A·(X·W)  → N·F·H + N·N·H multiplies
+
+With H ≪ F (e.g. Nell layer 1: F=5414, H=16) the paper reports a 311×
+reduction (2.3·10¹³ → 7.4·10¹⁰). The same reordering carries to the TPU
+implementation, where the dense-N² term becomes the E-edge sparse term:
+
+  aggregation-first   : E·F + N·F·H  MACs
+  feature-first (COIN): N·F·H + E·H  MACs
+
+This module provides both cost models and the order chooser used by the GCN
+layer (`repro.models.gcn`) at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "DataflowCost",
+    "dense_multiply_count",
+    "sparse_multiply_count",
+    "choose_order",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowCost:
+    aggregation_first: float
+    feature_first: float
+
+    @property
+    def reduction(self) -> float:
+        """How many × fewer multiplies feature-first performs."""
+        return self.aggregation_first / max(self.feature_first, 1.0)
+
+    @property
+    def best(self) -> str:
+        return "feature_first" if self.feature_first <= self.aggregation_first else "aggregation_first"
+
+
+def dense_multiply_count(n_nodes: int, d_in: int, d_out: int) -> DataflowCost:
+    """Paper's accounting (§IV-C3): crossbars store A densely (no sparsity)."""
+    n = float(n_nodes)
+    agg_first = n * n * d_in + n * d_in * d_out
+    feat_first = n * d_in * d_out + n * n * d_out
+    return DataflowCost(aggregation_first=agg_first, feature_first=feat_first)
+
+
+def sparse_multiply_count(n_nodes: int, n_edges: int, d_in: int, d_out: int) -> DataflowCost:
+    """TPU accounting: aggregation is an E-edge segment-sum / block-SpMM."""
+    n, e = float(n_nodes), float(n_edges)
+    agg_first = e * d_in + n * d_in * d_out
+    feat_first = n * d_in * d_out + e * d_out
+    return DataflowCost(aggregation_first=agg_first, feature_first=feat_first)
+
+
+def choose_order(n_nodes: int, d_in: int, d_out: int, n_edges: int | None = None) -> str:
+    """COIN's rule: run X·W first iff it shrinks the aggregated width.
+
+    For both the dense and sparse cost models the comparison reduces to
+    d_out vs d_in (the N·F·H term is shared), so the chooser is exact for
+    either accounting. Ties go to feature-first (the paper's order).
+    """
+    cost = (
+        sparse_multiply_count(n_nodes, n_edges, d_in, d_out)
+        if n_edges is not None
+        else dense_multiply_count(n_nodes, d_in, d_out)
+    )
+    return cost.best

@@ -1,0 +1,45 @@
+"""Graph substrate: message passing, blocking, sampling, synthetic datasets.
+
+JAX has no native sparse message-passing (BCOO only), so this package IS part
+of the system: edge-index scatter/gather aggregation via segment ops, padded
+static-shape graph containers, a 128×128 BSR blocker feeding the Pallas SpMM
+kernel, a CSR fanout neighbor sampler, and deterministic synthetic graph
+generators matching the paper's Table I statistics.
+"""
+
+from repro.graph.structure import GraphData, PaddedGraph, to_padded, blocked_adjacency, BlockedAdjacency
+from repro.graph.ops import (
+    aggregate,
+    segment_softmax,
+    sym_norm_edge_weights,
+    degrees,
+)
+from repro.graph.generators import (
+    TABLE_I,
+    GNN_SHAPES,
+    citation_like,
+    random_graph,
+    molecule_batch,
+    make_dataset,
+)
+from repro.graph.sampler import NeighborSampler, SampledBlock
+
+__all__ = [
+    "GraphData",
+    "PaddedGraph",
+    "to_padded",
+    "blocked_adjacency",
+    "BlockedAdjacency",
+    "aggregate",
+    "segment_softmax",
+    "sym_norm_edge_weights",
+    "degrees",
+    "TABLE_I",
+    "GNN_SHAPES",
+    "citation_like",
+    "random_graph",
+    "molecule_batch",
+    "make_dataset",
+    "NeighborSampler",
+    "SampledBlock",
+]

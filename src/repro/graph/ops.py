@@ -1,0 +1,137 @@
+"""Message-passing primitives over edge indices (jax.ops.segment_* based).
+
+This is the system's SpMM layer: aggregation `O = A·Z` expressed as
+gather(senders) → weight → segment-reduce(receivers). All functions take a
+static ``num_segments`` so they stay shard_map/pjit-friendly. Ghost-padded
+edges (receiver == n_nodes) accumulate into an extra row that callers slice
+off (see PaddedGraph).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "aggregate",
+    "aggregate_padded",
+    "segment_softmax",
+    "sym_norm_edge_weights",
+    "degrees",
+    "multi_aggregate",
+]
+
+
+def degrees(receivers: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(
+        jnp.ones_like(receivers, dtype=jnp.float32), receivers, num_segments=num_nodes
+    )
+
+
+def sym_norm_edge_weights(
+    senders: jnp.ndarray, receivers: jnp.ndarray, num_nodes: int
+) -> jnp.ndarray:
+    """D^-1/2 Ã D^-1/2 edge weights (Kipf–Welling normalization), in-graph."""
+    deg_r = degrees(receivers, num_nodes)
+    deg_s = degrees(senders, num_nodes)
+    inv_r = jax.lax.rsqrt(jnp.maximum(deg_r, 1.0))
+    inv_s = jax.lax.rsqrt(jnp.maximum(deg_s, 1.0))
+    return inv_s[senders] * inv_r[receivers]
+
+
+def aggregate(
+    features: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    num_nodes: int,
+    edge_weight: jnp.ndarray | None = None,
+    reduce: str = "sum",
+) -> jnp.ndarray:
+    """O[r] = reduce_{(s,r) ∈ E} w_sr · Z[s] — the GCN aggregation stage."""
+    msgs = features[senders]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    if reduce == "sum":
+        return jax.ops.segment_sum(msgs, receivers, num_segments=num_nodes)
+    if reduce == "mean":
+        total = jax.ops.segment_sum(msgs, receivers, num_segments=num_nodes)
+        cnt = degrees(receivers, num_nodes)
+        return total / jnp.maximum(cnt, 1.0)[:, None]
+    if reduce == "max":
+        return jax.ops.segment_max(msgs, receivers, num_segments=num_nodes)
+    if reduce == "min":
+        return jax.ops.segment_min(msgs, receivers, num_segments=num_nodes)
+    raise ValueError(f"unknown reduce: {reduce!r}")
+
+
+def aggregate_padded(
+    features: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    num_nodes: int,
+    edge_weight: jnp.ndarray | None = None,
+    reduce: str = "sum",
+) -> jnp.ndarray:
+    """Aggregation when edges are ghost-padded: features has a zero ghost row
+    appended, the segment space is num_nodes+1, and the ghost row is dropped."""
+    feats = jnp.concatenate([features, jnp.zeros_like(features[:1])], axis=0)
+    out = aggregate(feats, senders, receivers, num_nodes + 1, edge_weight, reduce)
+    return out[:num_nodes]
+
+
+def multi_aggregate(
+    features: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    num_nodes: int,
+    edge_weight: jnp.ndarray | None = None,
+) -> dict[str, jnp.ndarray]:
+    """PNA-style parallel aggregators computed off shared messages:
+    mean / max / min / std (std via E[x²]−E[x]² on the same segments)."""
+    msgs = features[senders]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    ssum = jax.ops.segment_sum(msgs, receivers, num_segments=num_nodes)
+    sqsum = jax.ops.segment_sum(msgs * msgs, receivers, num_segments=num_nodes)
+    cnt = jnp.maximum(degrees(receivers, num_nodes), 1.0)[:, None]
+    mean = ssum / cnt
+    var = jnp.maximum(sqsum / cnt - mean * mean, 0.0)
+    smax = jax.ops.segment_max(msgs, receivers, num_segments=num_nodes)
+    smin = jax.ops.segment_min(msgs, receivers, num_segments=num_nodes)
+    # Empty segments: segment_max/min give -inf/+inf; zero them.
+    finite = jnp.isfinite(smax)
+    smax = jnp.where(finite, smax, 0.0)
+    smin = jnp.where(jnp.isfinite(smin), smin, 0.0)
+    return {"mean": mean, "max": smax, "min": smin, "std": jnp.sqrt(var + 1e-8)}
+
+
+def multi_aggregate_edges(
+    messages: jnp.ndarray,
+    receivers: jnp.ndarray,
+    num_nodes: int,
+) -> dict[str, jnp.ndarray]:
+    """PNA aggregators over per-edge messages (already gathered/transformed)."""
+    ssum = jax.ops.segment_sum(messages, receivers, num_segments=num_nodes)
+    sqsum = jax.ops.segment_sum(messages * messages, receivers, num_segments=num_nodes)
+    cnt = jnp.maximum(degrees(receivers, num_nodes), 1.0)[:, None]
+    mean = ssum / cnt
+    var = jnp.maximum(sqsum / cnt - mean * mean, 0.0)
+    smax = jax.ops.segment_max(messages, receivers, num_segments=num_nodes)
+    smin = jax.ops.segment_min(messages, receivers, num_segments=num_nodes)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    smin = jnp.where(jnp.isfinite(smin), smin, 0.0)
+    return {"mean": mean, "max": smax, "min": smin, "std": jnp.sqrt(var + 1e-8)}
+
+
+@partial(jax.jit, static_argnames=("num_nodes",))
+def segment_softmax(
+    logits: jnp.ndarray, receivers: jnp.ndarray, num_nodes: int
+) -> jnp.ndarray:
+    """Numerically-stable per-destination softmax over incoming edges (GAT)."""
+    seg_max = jax.ops.segment_max(logits, receivers, num_segments=num_nodes)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[receivers]
+    expd = jnp.exp(shifted)
+    denom = jax.ops.segment_sum(expd, receivers, num_segments=num_nodes)
+    return expd / jnp.maximum(denom[receivers], 1e-16)

@@ -1,0 +1,179 @@
+"""Graph containers: host-side data, padded static-shape device form, and the
+128×128 blocked (BSR) adjacency that mirrors COIN's crossbar mapping.
+
+COIN stores the adjacency in 128×128 RRAM crossbars; the TPU-native analogue
+is a block-sparse matrix whose nonzero 128×128 blocks are dense MXU tiles
+(DESIGN.md §2). `blocked_adjacency` produces that representation (numpy,
+host-side, one-time cost), consumed by `repro.kernels.bsr_spmm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GraphData", "PaddedGraph", "to_padded", "BlockedAdjacency", "blocked_adjacency"]
+
+
+@dataclasses.dataclass
+class GraphData:
+    """Host-side (numpy) graph with optional features/labels/positions."""
+
+    n_nodes: int
+    edge_index: np.ndarray                  # (2, E) int32, [senders; receivers]
+    edge_weight: np.ndarray | None = None   # (E,) float32
+    features: np.ndarray | None = None      # (N, F) float32
+    labels: np.ndarray | None = None        # (N,) int32
+    positions: np.ndarray | None = None     # (N, 3) float32 (geometric models)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_index.shape[1])
+
+    def with_self_loops(self) -> "GraphData":
+        loops = np.arange(self.n_nodes, dtype=self.edge_index.dtype)
+        ei = np.concatenate([self.edge_index, np.stack([loops, loops])], axis=1)
+        ew = None
+        if self.edge_weight is not None:
+            ew = np.concatenate([self.edge_weight, np.ones(self.n_nodes, np.float32)])
+        return dataclasses.replace(self, edge_index=ei, edge_weight=ew)
+
+    def symmetrized(self) -> "GraphData":
+        rev = self.edge_index[::-1]
+        ei = np.concatenate([self.edge_index, rev], axis=1)
+        ei = np.unique(ei, axis=1)
+        return dataclasses.replace(self, edge_index=ei.astype(np.int32), edge_weight=None)
+
+    def sym_normalized_weights(self) -> np.ndarray:
+        """D^-1/2 Ã D^-1/2 weights (Kipf–Welling; the paper's GCN [11])."""
+        s, r = self.edge_index
+        deg = np.bincount(r, minlength=self.n_nodes).astype(np.float64)
+        deg_s = np.bincount(s, minlength=self.n_nodes).astype(np.float64)
+        inv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+        inv_s = 1.0 / np.sqrt(np.maximum(deg_s, 1.0))
+        return (inv_s[s] * inv[r]).astype(np.float32)
+
+
+@dataclasses.dataclass
+class PaddedGraph:
+    """Static-shape device form: edges padded with a ghost node (id = n_nodes).
+
+    Ghost-targeted messages land in segment id `n_nodes` and are sliced off,
+    so no mask multiply is needed in the hot loop.
+    """
+
+    senders: jnp.ndarray        # (E_pad,) int32
+    receivers: jnp.ndarray      # (E_pad,) int32
+    edge_weight: jnp.ndarray    # (E_pad,) float32; 0 at padding
+    n_nodes: int                # static
+    n_real_edges: int           # static
+
+    @property
+    def n_edges_padded(self) -> int:
+        return int(self.senders.shape[0])
+
+
+def to_padded(g: GraphData, pad_to: int | None = None, weights: np.ndarray | None = None) -> PaddedGraph:
+    e = g.n_edges
+    pad_to = pad_to or e
+    assert pad_to >= e, "pad_to smaller than edge count"
+    if weights is None:
+        weights = g.edge_weight if g.edge_weight is not None else np.ones(e, np.float32)
+    s = np.full(pad_to, g.n_nodes, np.int32)
+    r = np.full(pad_to, g.n_nodes, np.int32)
+    w = np.zeros(pad_to, np.float32)
+    s[:e], r[:e], w[:e] = g.edge_index[0], g.edge_index[1], weights
+    return PaddedGraph(
+        senders=jnp.asarray(s),
+        receivers=jnp.asarray(r),
+        edge_weight=jnp.asarray(w),
+        n_nodes=g.n_nodes,
+        n_real_edges=e,
+    )
+
+
+@dataclasses.dataclass
+class BlockedAdjacency:
+    """BSR-like 128×128 blocking of A (COIN crossbar map → MXU tiles).
+
+    Per block-row, the nonzero block-columns are padded to the max row degree
+    so the Pallas kernel can scalar-prefetch a rectangular index array:
+
+      block_vals : (n_block_rows, max_nnzb, B, B) float32 — dense tiles
+      block_cols : (n_block_rows, max_nnzb) int32 — column-block ids,
+                   padding repeats the last valid id with a zero tile
+      row_nnzb   : (n_block_rows,) int32 — valid tiles per block-row
+    """
+
+    block_vals: np.ndarray
+    block_cols: np.ndarray
+    row_nnzb: np.ndarray
+    n_nodes: int
+    block: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return int(self.block_vals.shape[0])
+
+    @property
+    def n_padded(self) -> int:
+        return self.n_block_rows * self.block
+
+    @property
+    def density(self) -> float:
+        """Fraction of 128×128 blocks that are materialized (incl. padding)."""
+        grid = self.n_block_rows * (self.n_padded // self.block)
+        return float(self.block_vals.shape[0] * self.block_vals.shape[1]) / max(grid, 1)
+
+
+def blocked_adjacency(
+    n_nodes: int,
+    edge_index: np.ndarray,
+    edge_weight: np.ndarray | None = None,
+    block: int = 128,
+) -> BlockedAdjacency:
+    """Build the 128×128 blocked adjacency (numpy, one-time host cost).
+
+    A[r, c] = w for each edge (sender=c, receiver=r): aggregation computes
+    O = A·Z, rows = receivers.
+    """
+    s = np.asarray(edge_index[0], dtype=np.int64)
+    r = np.asarray(edge_index[1], dtype=np.int64)
+    w = (
+        np.ones(s.shape[0], np.float32)
+        if edge_weight is None
+        else np.asarray(edge_weight, np.float32)
+    )
+    nbr = -(-n_nodes // block)  # ceil
+    br, bc = r // block, s // block
+    # Unique nonzero blocks, then scatter edges into dense tiles.
+    key = br * nbr + bc
+    uniq, inv = np.unique(key, return_inverse=True)
+    n_blocks = uniq.shape[0]
+    vals = np.zeros((n_blocks, block, block), np.float32)
+    np.add.at(vals, (inv, r % block, s % block), w)
+    ubr, ubc = uniq // nbr, uniq % nbr
+    # Group blocks by block-row, pad to max row nnzb.
+    row_nnzb = np.bincount(ubr, minlength=nbr).astype(np.int32)
+    max_nnzb = max(int(row_nnzb.max(initial=1)), 1)
+    block_vals = np.zeros((nbr, max_nnzb, block, block), np.float32)
+    block_cols = np.zeros((nbr, max_nnzb), np.int32)
+    order = np.argsort(ubr, kind="stable")
+    pos = np.zeros(nbr, np.int64)
+    for idx in order:
+        rr = ubr[idx]
+        block_vals[rr, pos[rr]] = vals[idx]
+        block_cols[rr, pos[rr]] = ubc[idx]
+        pos[rr] += 1
+    # Pad columns repeat the last valid id (zero tiles → harmless matmuls).
+    for rr in range(nbr):
+        if 0 < pos[rr] < max_nnzb:
+            block_cols[rr, pos[rr]:] = block_cols[rr, pos[rr] - 1]
+    return BlockedAdjacency(
+        block_vals=block_vals,
+        block_cols=block_cols,
+        row_nnzb=row_nnzb,
+        n_nodes=n_nodes,
+        block=block,
+    )

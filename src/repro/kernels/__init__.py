@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  bsr_spmm        — 128×128 block-sparse Ã·Z (COIN crossbar → MXU mapping)
+  fm_interaction  — DeepFM linearized second-order interaction
+  flash_attention — causal/sliding-window online-softmax attention
+
+Each kernel ships with a pure-jnp oracle in `ref.py` and a jit'd public
+wrapper in `ops.py` (interpret mode on CPU, native on TPU).
+"""
+
+from repro.kernels.ops import bsr_spmm, fm_interaction, flash_attention
+
+__all__ = ["bsr_spmm", "fm_interaction", "flash_attention"]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window), fwd only.
+
+Online-softmax attention for the LM family: grid (B·H, nQ, nK) with k-blocks
+innermost; running max m, normalizer l live in VMEM scratch, the output tile
+accumulates rescaled partial sums. Sliding windows reuse the same kernel with
+a per-position validity mask  q−window < k ≤ q. The jnp oracle is
+`repro.kernels.ref.flash_attention_ref` (identical math to
+`repro.nn.attention._chunked_attention`, which the models run on CPU).
+
+VMEM per step: q (Bq·d) + k,v (Bk·d) + scores (Bq·Bk) + acc (Bq·d) floats.
+Bq=Bk=256, d=128 → ≈ 0.7 MB. MXU dims 128-aligned for d ∈ {128, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory; interpret mode accepts the same spec
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, win_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, causal):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (Bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (Bk, d)
+    v = v_ref[0].astype(jnp.float32)                     # (Bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (q.shape[-1] ** -0.5)                            # (Bq, Bk)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    win = win_ref[0]
+    valid = (k_pos > q_pos - win)
+    if causal:
+        valid &= k_pos <= q_pos
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * scale + p.sum(axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * scale[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,              # (BH, S, d)
+    k: jax.Array,              # (BH, S, d)
+    v: jax.Array,              # (BH, S, d)
+    window: jax.Array | int | None = None,
+    bq: int = 256,
+    bk: int = 256,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, d = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    win = jnp.asarray(S if window is None else window, jnp.int32).reshape(1)
+    grid = (BH, S // bq, S // bk)
+    scratch = [
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq, d), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v, win)

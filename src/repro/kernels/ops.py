@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile natively. `interpret=None` auto-detects the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmm import bsr_spmm_pallas
+from repro.kernels.fm_interaction import fm_interaction_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = ["bsr_spmm", "fm_interaction", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto(interpret: bool | None) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def bsr_spmm(vals, cols, z, f_tile: int | None = None, interpret: bool | None = None):
+    """Block-sparse Ã·Z. Pads the feature dim to the tile size if needed."""
+    F = z.shape[1]
+    if f_tile is None:
+        f_tile = 512 if F >= 512 else max(128, 1 << (F - 1).bit_length())
+    pad = (-F) % f_tile
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+    out = bsr_spmm_pallas(vals, cols, z, f_tile=f_tile, interpret=_auto(interpret))
+    return out[:, :F] if pad else out
+
+
+def fm_interaction(emb, b_tile: int = 256, interpret: bool | None = None):
+    B = emb.shape[0]
+    while B % b_tile:
+        b_tile //= 2
+    return fm_interaction_pallas(emb, b_tile=max(b_tile, 1), interpret=_auto(interpret))
+
+
+def flash_attention(q, k, v, window=None, causal: bool = True,
+                    bq: int = 256, bk: int = 256, interpret: bool | None = None):
+    return flash_attention_pallas(
+        q, k, v, window=window, bq=bq, bk=bk, causal=causal, interpret=_auto(interpret)
+    )

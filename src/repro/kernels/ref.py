@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` layer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bsr_spmm_ref", "fm_interaction_ref", "flash_attention_ref"]
+
+
+def bsr_spmm_ref(vals: jax.Array, cols: jax.Array, z: jax.Array) -> jax.Array:
+    """Dense-gather oracle: out[r] = Σ_t vals[r,t] @ Z_block[cols[r,t]]."""
+    R, T, B, _ = vals.shape
+    F = z.shape[1]
+    zb = z.reshape(-1, B, F)                       # (Cb, B, F)
+    gathered = zb[cols]                            # (R, T, B, F)
+    return jnp.einsum("rtij,rtjf->rif", vals, gathered).reshape(R * B, F)
+
+
+def fm_interaction_ref(emb: jax.Array) -> jax.Array:
+    e = emb.astype(jnp.float32)
+    s = e.sum(axis=1)
+    sq = (e * e).sum(axis=1)
+    return (0.5 * (s * s - sq).sum(axis=-1)).astype(emb.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    window: int | None = None, causal: bool = True,
+) -> jax.Array:
+    BH, S, d = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * (d ** -0.5)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    win = S if window is None else window
+    valid = kp > qp - win
+    if causal:
+        valid &= kp <= qp
+    s = jnp.where(valid[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+_DOC = """Multi-pod dry-run (deliverable e) + roofline-term extraction (deliverable g).
+
+For every (architecture × input shape) cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings, out_shardings).lower(*abstract)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes(parse HLO)
+
+on BOTH the 16×16 single-pod mesh (roofline source) and the 2×16×16
+multi-pod mesh (proves the `pod` axis shards). Results are appended to a
+resumable JSON (one record per cell × mesh), consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch pna --shape molecule
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 512-chip pass
+"""
+
+import argparse
+
+import json
+import re
+import sys
+import time
+import traceback
+
+__doc__ = _DOC
+
+__all__ = ["run_cell", "collective_bytes", "main"]
+
+RESULTS_PATH = "results/dryrun.json"
+
+# TPU v5e constants (per the assignment's §Roofline).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one HLO shape string like 'bf16[256,4096]' or a tuple."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*([^=]*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the post-SPMD HLO.
+
+    The result shape of each collective instruction line —
+    `%x = f32[170,75]{1,0} all-reduce(...)` — is per-device shaped after SPMD
+    partitioning, so the sum is the per-device wire volume entering the
+    network (the quantity the ICI roofline term needs). `-done` ops carry the
+    same tuple as their `-start`; only lines that themselves name a
+    collective op with an argument list are counted, and `-done`/`-update`
+    variants don't match the pattern.
+    """
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(out.values())
+    return out
+
+
+def extrapolated_cost(cell, mesh) -> tuple[float, float, dict]:
+    """Scan-corrected (flops, bytes, collectives) from the cell's cost cells.
+
+    One cost cell → use verbatim. Two → fit cost(g) = fixed + g·delta with
+    delta = max((c₂−c₁)/(g₂−g₁), 0), fixed = max(c₁ − g₁·delta, 0), and
+    evaluate at cell.cost_groups (see steps.Cell docs for why the clamps).
+    """
+    measured = []
+    for sub, g in cell.cost_cells:
+        sc = sub.lower(mesh).compile()
+        s_cost = sc.cost_analysis() or {}
+        s_coll = collective_bytes(sc.as_text())
+        measured.append(
+            (g, float(s_cost.get("flops", 0.0)), float(s_cost.get("bytes accessed", 0.0)), s_coll)
+        )
+    if len(measured) == 1:
+        _, fl, by, co = measured[0]
+        return fl, by, co
+    (g1, f1, b1, c1), (g2, f2, b2, c2) = measured[:2]
+    G = cell.cost_groups
+
+    def fit(a, b):
+        d = max((b - a) / (g2 - g1), 0.0)
+        fixed = max(a - g1 * d, 0.0)
+        return fixed + G * d
+
+    coll = {}
+    for k in set(c1) | set(c2):
+        coll[k] = fit(c1.get(k, 0.0), c2.get(k, 0.0))
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    return fit(f1, f2), fit(b1, b2), coll
+
+
+def run_cell(
+    arch_id: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+    optimized: bool = False,
+) -> dict:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    rec: dict = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": ("2x16x16" if multi_pod else "16x16") + ("+opt" if optimized else ""),
+        "ts": time.time(),
+    }
+    if shape.skip_reason:
+        rec.update(status="SKIP", reason=shape.skip_reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        cell = build_cell(spec, shape, mesh, optimized=optimized)
+        lowered = cell.lower(mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            mem_d = {}
+        hlo = compiled.as_text()
+        if cell.cost_cells:
+            flops, bytes_hbm, coll = extrapolated_cost(cell, mesh)
+        else:
+            coll = collective_bytes(hlo)
+            flops = float(cost.get("flops", 0.0))
+            bytes_hbm = float(cost.get("bytes accessed", 0.0))
+        # cost_analysis on the CPU backend reports per-PROGRAM (per-device)
+        # numbers for the SPMD-partitioned module.
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_hbm / HBM_BW
+        collective_s = coll["total"] / ICI_BW
+        dominant = max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+            key=lambda kv: kv[1],
+        )[0]
+        rec.update(
+            status="OK",
+            kind=cell.kind,
+            n_chips=int(n_chips),
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops,
+            hbm_bytes_per_device=bytes_hbm,
+            collective_bytes_per_device=coll,
+            memory=mem_d,
+            roofline={
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "dominant": dominant,
+            },
+            model_flops=cell.model_flops,
+            useful_flops_ratio=(cell.model_flops / (flops * n_chips)) if flops else None,
+            note=cell.note,
+        )
+        if verbose:
+            print(f"[{rec['mesh']}] {arch_id} × {shape_name}: OK "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+                  f"dominant={dominant})")
+            print(f"    memory_analysis: {mem_d}")
+            print(f"    cost_analysis: flops/dev={flops:.3g} bytes/dev={bytes_hbm:.3g} "
+                  f"coll_bytes/dev={coll['total']:.3g}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{rec['mesh']}] {arch_id} × {shape_name}: FAIL {type(e).__name__}: {e}")
+    return rec
+
+
+def _load(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return []
+
+
+def _save(path: str, records: list[dict]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, default=str)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf findings (beyond-paper variants)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch, ASSIGNED_ARCHS
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    records = _load(args.out)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records if r.get("status") in ("OK", "SKIP")}
+    failures = 0
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_tag = ("2x16x16" if multi else "16x16") + ("+opt" if args.optimized else "")
+                key = (arch_id, shape_name, mesh_tag)
+                if key in done and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                rec = run_cell(arch_id, shape_name, multi, optimized=args.optimized)
+                records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
+                records.append(rec)
+                _save(args.out, records)
+                if rec["status"] == "FAIL":
+                    failures += 1
+    print(f"dry-run sweep complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,575 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+_DOC = """§Perf hillclimb driver: the three selected cells, baseline + variants.
+
+Targets (picked from the baseline roofline table, EXPERIMENTS.md §Roofline):
+  1. moonshot-v1-16b-a3b × train_4k — most collective-bound (MoE dispatch),
+  2. granite-34b × train_4k         — worst peak memory (42.9 GB/device),
+  3. pna × ogb_products             — most paper-representative: full-graph
+                                      GNN whose exchange the COIN objective
+                                      governs (broadcast → halo).
+
+Each iteration records hypothesis → change → before/after roofline terms in
+results/hillclimb.json; EXPERIMENTS.md §Perf narrates them.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--target 1|2|3|all]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+__doc__ = _DOC
+
+RESULTS = "results/hillclimb.json"
+
+
+def _measure(cell, mesh, tag: str) -> dict:
+    """Lower + compile + roofline terms (same pipeline as dryrun.run_cell)."""
+    from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes
+    from repro.launch.dryrun import extrapolated_cost
+
+    t0 = time.time()
+    lowered = cell.lower(mesh)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    try:
+        mem = compiled.memory_analysis()
+        peak = getattr(mem, "peak_memory_in_bytes", None)
+    except Exception:
+        peak = None
+    if cell.cost_cells:
+        flops, bytes_hbm, coll = extrapolated_cost(cell, mesh)
+    else:
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        flops = float(cost.get("flops", 0.0))
+        bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    rec = {
+        "tag": tag,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+        "collective_by_type": {k: v for k, v in coll.items() if v},
+        "peak_bytes": peak,
+        "compile_s": round(compile_s, 1),
+        "model_flops": cell.model_flops,
+    }
+    print(f"  [{tag}] compute={rec['compute_s']:.3g}s memory={rec['memory_s']:.3g}s "
+          f"collective={rec['collective_s']:.3g}s peak={(peak or 0)/1e9:.1f}GB "
+          f"(compile {compile_s:.0f}s)")
+    return rec
+
+
+# ================================================== target 1: MoE collectives
+def target1_moe() -> list[dict]:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh()
+    spec = get_arch("moonshot-v1-16b-a3b")
+    shape = spec.shapes["train_4k"]
+    out = []
+
+    print("[T1] moonshot-v1-16b-a3b × train_4k (collective-bound MoE)")
+    print("  hypothesis A: the flat dispatch sorts/scatters a GLOBAL (T·K)"
+          " token stream across shards → XLA emits all-gathers of activations"
+          " per MoE layer; grouping dispatch per data shard (G=16) keeps the"
+          " sort local and only the (G,E,C,D) buffer crosses the EP axis:"
+          " predicted wire/layer ≈ 2·buf/256dev ≈ 0.25 GB vs ≳4 GB.")
+    out.append(_measure(build_cell(spec, shape, mesh), mesh, "t1-baseline groups=1"))
+
+    cfg16 = dataclasses.replace(spec.make_config(shape), moe_groups=16)
+    spec16 = dataclasses.replace(spec, make_config=lambda s=None, c=cfg16: c)
+    out.append(_measure(build_cell(spec16, shape, mesh), mesh, "t1-a groups=16 (EP all-to-all)"))
+
+    print("  hypothesis B: with dispatch fixed, remat trims the activation"
+          " traffic of the backward pass (fewer saved intermediates).")
+    cfg_r = dataclasses.replace(cfg16, remat=True)
+    spec_r = dataclasses.replace(spec, make_config=lambda s=None, c=cfg_r: c)
+    out.append(_measure(build_cell(spec_r, shape, mesh), mesh, "t1-b groups=16 + remat"))
+
+    print("  hypothesis C: with the collective fixed, memory dominates; the"
+          " (G,E,C,D) buffer carries 25% capacity padding — cf 1.25 → 1.0"
+          " should cut the dispatch-buffer traffic term by ~20% (drops"
+          " overflow tokens; the standard Switch trade).")
+    cfg_c = dataclasses.replace(cfg16, moe_capacity_factor=1.0)
+    spec_c = dataclasses.replace(spec, make_config=lambda s=None, c=cfg_c: c)
+    out.append(_measure(build_cell(spec_c, shape, mesh), mesh, "t1-c groups=16 + cf=1.0"))
+    return out
+
+
+# ================================================ target 2: granite peak mem
+def target2_granite() -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import data_axes, make_production_mesh
+    from repro.launch.steps import build_cell, _lm_cell
+    from repro.train.optimizer import adamw
+
+    mesh = make_production_mesh()
+    spec = get_arch("granite-34b")
+    shape = spec.shapes["train_4k"]
+    out = []
+    print("[T2] granite-34b × train_4k (memory-bound, 42.9 GB/device peak)")
+    out.append(_measure(build_cell(spec, shape, mesh), mesh, "t2-baseline"))
+
+    print("  hypothesis A: peak is dominated by saved per-layer activations"
+          " (88 layers × B·S·D ≈ 88×16×4096×6144×2B/16TP ≈ 33 GB/dev);"
+          " remat on the layer scan should cut peak to O(1 layer) + params"
+          " at ~+30% recompute FLOPs.")
+    cfg_r = dataclasses.replace(spec.make_config(shape), remat=True)
+    spec_r = dataclasses.replace(spec, make_config=lambda s=None, c=cfg_r: c)
+    out.append(_measure(build_cell(spec_r, shape, mesh), mesh, "t2-a remat"))
+
+    print("  hypothesis B: microbatching (8×) shrinks live activations"
+          " another 8× at constant math; combined with remat the step should"
+          " fit 16 GB with headroom.")
+    from repro.models.transformer_lm import lm_loss, lm_param_shapes
+
+    cfg = cfg_r
+    da = data_axes(mesh)
+    policy = sh.lm_policy(mesh, cfg)
+    params_abs = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16), lm_param_shapes(cfg)
+    )
+    p_specs = sh.lm_param_specs(params_abs, cfg, mesh)
+    p_shard = sh.tree_named(mesh, p_specs)
+    opt = adamw(3e-4)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_shard = sh.tree_named(mesh, {"m": p_specs, "v": p_specs, "step": P()})
+    ACC = 8
+    B = shape.global_batch
+
+    def train_step_accum(params, opt_state, tokens):
+        mb = tokens.reshape(ACC, B // ACC, shape.seq_len + 1)
+
+        def micro(carry, t):
+            loss, acc = carry
+            l, g = jax.value_and_grad(lm_loss)(params, t, cfg, policy)
+            return (loss + l, jax.tree_util.tree_map(jnp.add, acc, g)), None
+
+        zero = jax.tree_util.tree_map(jnp.zeros_like, params)
+        (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / ACC, grads)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss / ACC
+
+    from repro.launch.steps import Cell, _sds
+
+    tokens = _sds((B, shape.seq_len + 1), jnp.int32)
+    base = build_cell(spec_r, shape, mesh)      # reuse cost cells for costing
+    cell = Cell(
+        spec.arch_id, shape.name, "train_step", train_step_accum,
+        (params_abs, opt_abs, tokens),
+        (p_shard, o_shard, sh.named(mesh, P(da, None))),
+        (p_shard, o_shard, sh.named(mesh, P())),
+        model_flops=base.model_flops,
+        cost_cells=base.cost_cells,
+        cost_groups=base.cost_groups,
+    )
+    out.append(_measure(cell, mesh, "t2-b remat + 8x microbatch"))
+
+    print("  hypothesis C: peak_bytes on this backend = arguments + outputs"
+          " (params/opt counted twice without aliasing); donating params &"
+          " opt state (the in-place update a real deployment uses) should"
+          " remove the output copy: predicted peak 42.9 → ~18 GB.")
+    donated = dataclasses.replace(base, donate_argnums=(0, 1))
+    out.append(_measure(donated, mesh, "t2-c remat + donation"))
+    return out
+
+
+# =========================================== target 3: PNA broadcast → halo
+def _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=None):
+    """Train cell for PNA over the halo plan (shard_map core).
+
+    compute_dtype=bf16 (t3-b) casts features/messages for the exchange and
+    the edge math — halves both the wire bytes and the dominant (E, ·)
+    intermediate traffic; params/optimizer stay fp32."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.policy import NO_POLICY
+    from repro.graph.ops import multi_aggregate_edges
+    from repro.launch import shardings as sh
+    from repro.launch.steps import Cell, _gnn_params, _sds
+    from repro.nn.layers import linear
+    from repro.train.optimizer import adamw
+
+    cd = compute_dtype or jnp.float32
+    k = plan.k
+    params_abs = _gnn_params("pna", cfg, jnp.float32)
+    p_specs = sh.replicated_specs(params_abs)
+    p_shard = sh.tree_named(mesh, p_specs)
+    opt = adamw(1e-3)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_shard = sh.tree_named(mesh, {"m": p_specs, "v": p_specs, "step": P()})
+    si, sl, rl, ew = plan.abstract_inputs()
+    batch_abs = {
+        "feats": _sds((k, plan.n_local, cfg.d_in), jnp.float32),
+        "send_idx": si,
+        "senders": sl,
+        "receivers": rl,
+        "edge_w": ew,
+        "target": _sds((k, plan.n_local, cfg.d_out), jnp.float32),
+    }
+    b_shard = jax.tree_util.tree_map(
+        lambda l: sh.named(mesh, P("model", *([None] * (len(l.shape) - 1)))), batch_abs
+    )
+
+    from repro.dist.halo import halo_exchange
+
+    def device_forward(params, feats, send_idx, senders, receivers, edge_w, target):
+        # One device's block (leading axis 1 stripped by shard_map).
+        params = jax.tree_util.tree_map(lambda p: p.astype(cd), params)
+        feats = feats.astype(cd)
+        h = jax.nn.relu(linear(params["enc"], feats))
+        deg = jax.ops.segment_sum(
+            (edge_w > 0).astype(jnp.float32), receivers, num_segments=plan.n_local
+        )
+        logd = jnp.log1p(deg)[:, None]
+        amp = logd / cfg.mean_log_degree
+        att = cfg.mean_log_degree / jnp.maximum(logd, 1e-6)
+        for i in range(cfg.n_layers):
+            halo = halo_exchange(h, send_idx, "model")
+            full = jnp.concatenate([h, halo], axis=0)
+            msg_in = jnp.concatenate([full[senders], h[receivers]], axis=-1)
+            msg = jax.nn.relu(linear(params[f"pre{i}"], msg_in)) * (edge_w > 0)[:, None]
+            aggs = multi_aggregate_edges(msg, receivers, plan.n_local)
+            feats_cat = [h]
+            for a in ("mean", "max", "min", "std"):
+                v = aggs[a]
+                feats_cat += [v, v * amp, v * att]
+            h = h + jax.nn.relu(linear(params[f"post{i}"], jnp.concatenate(feats_cat, -1)))
+        pred = linear(params["dec"], h)
+        loss = jnp.mean(jnp.square(pred.astype(jnp.float32) - target))
+        return jax.lax.pmean(loss, "model")
+
+    def loss_fn(params, batch):
+        f = jax.shard_map(
+            lambda fe, si, sl, rl, ew, tg: device_forward(
+                params, fe[0], si[0], sl[0], rl[0], ew[0], tg[0]
+            )[None],
+            mesh=mesh,
+            in_specs=(P("model"),) * 6,
+            out_specs=P("model"),
+        )
+        losses = f(batch["feats"], batch["send_idx"], batch["senders"],
+                   batch["receivers"], batch["edge_w"], batch["target"])
+        return losses.mean()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return Cell(
+        "pna", shape.name, "train_step", train_step,
+        (params_abs, opt_abs, batch_abs),
+        (p_shard, o_shard, b_shard),
+        (p_shard, o_shard, sh.named(mesh, P())),
+        model_flops=0.0,
+        note=f"halo s_max={plan.s_max} n_local={plan.n_local}",
+    )
+
+
+def target3_pna() -> list[dict]:
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.core.partition import partition_graph
+    from repro.dist.halo import HaloPlan, build_halo_plan
+    from repro.graph.generators import citation_like
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, _gnn_flops
+
+    mesh = make_production_mesh()
+    spec = get_arch("pna")
+    shape = spec.shapes["ogb_products"]
+    out = []
+    print("[T3] pna × ogb_products (paper-representative: exchange schedule)")
+    out.append(_measure(build_cell(spec, shape, mesh), mesh, "t3-baseline broadcast"))
+
+    print("  hypothesis: the broadcast all-gather ships (k−1)/k·N·d per layer;"
+          " a halo exchange over a locality-refined partition ships only the"
+          " per-pair boundary sources (the quantity COIN's Eq. 2 minimizes)."
+          " The model axis is 16 → plan with k=16.")
+    # Host-side plan over the exact-statistics synthetic graph (cached).
+    plan_path = "results/halo_plan_ogb.npz"
+    t0 = time.time()
+    if os.path.exists(plan_path):
+        z = np.load(plan_path)
+        plan = HaloPlan(
+            k=int(z["k"]), n_local=int(z["n_local"]), s_max=int(z["s_max"]),
+            e_local=int(z["e_local"]), perm=z["perm"], send_idx=z["send_idx"],
+            senders_l=z["senders_l"], receivers_l=z["receivers_l"],
+            edge_w=z["edge_w"], n_nodes=int(z["n_nodes"]),
+        )
+        parts = {"cut": float(z["cut"]), "cut_block": float(z["cut_block"])}
+    else:
+        g = citation_like(shape.n_nodes, shape.n_edges, seed=0)
+        part_r = partition_graph(g.n_nodes, g.edge_index, 16, method="bfs", seed=0, refine=True)
+        part_b = partition_graph(g.n_nodes, g.edge_index, 16, method="block")
+        plan = build_halo_plan(part_r, g.edge_index)
+        np.savez_compressed(
+            plan_path, k=plan.k, n_local=plan.n_local, s_max=plan.s_max,
+            e_local=plan.e_local, perm=plan.perm, send_idx=plan.send_idx,
+            senders_l=plan.senders_l, receivers_l=plan.receivers_l,
+            edge_w=plan.edge_w, n_nodes=plan.n_nodes,
+            cut=part_r.cut_fraction, cut_block=part_b.cut_fraction,
+        )
+        parts = {"cut": part_r.cut_fraction, "cut_block": part_b.cut_fraction}
+    print(f"  plan ready in {time.time()-t0:.0f}s: s_max={plan.s_max} "
+          f"cut(refined)={parts['cut']:.3f} vs cut(block)={parts['cut_block']:.3f}")
+
+    cfg = spec.make_config(shape)
+    cell = _pna_halo_cell(mesh, plan, cfg, shape)
+    cell.model_flops = _gnn_flops("pna", shape, cfg) * 3.0
+    rec = _measure(cell, mesh, "t3-a halo exchange (refined partition)")
+    rec["plan"] = {"s_max": plan.s_max, **parts}
+    out.append(rec)
+
+    print("  iteration: t3-a killed the collective term but regressed the"
+          " memory term (padding + (E,2d) message tiles now fully local)."
+          " hypothesis: bf16 edge math halves the dominant intermediate"
+          " traffic at harmless precision for message passing.")
+    import jax.numpy as jnp
+
+    cell_b = _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=jnp.bfloat16)
+    cell_b.model_flops = _gnn_flops("pna", shape, cfg) * 3.0
+    out.append(_measure(cell_b, mesh, "t3-b halo + bf16 edge math"))
+    return out
+
+
+# ===================================== stretch: gemma3 long-context KV cache
+def _gemma_twostack_cell(mesh, spec, shape, ring: bool = False):
+    """Decode step where the 40 local layers read only their 1024-token
+    window (the 8 global layers still read all 524k), in the exact
+    5-local+1-global interleaved order.
+
+    ring=False — windows via dynamic_slice of the SHARDED full cache
+      (t4-a; refuted: XLA must replicate across the 256-way seq sharding).
+    ring=True  — local layers keep a separate REPLICATED W-slot ring buffer
+      (slot = pos mod W; validity mask derived from pos, no stored
+      positions needed); only global layers keep the sharded 524k cache
+      (t4-b). Ring bytes: 40·1024·8·240·2·2B ≈ 315 MB replicated."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import shardings as sh
+    from repro.launch.steps import Cell, _abstract_tree, _sds
+    from repro.models.transformer_lm import lm_init_cache, lm_param_shapes, _ffn
+    from repro.nn.attention import rope
+    from repro.nn.layers import rms_norm
+
+    cfg = spec.make_config(shape)
+    W = cfg.window                      # 1024, static
+    period = cfg.global_every           # 6
+    n_groups = cfg.n_layers // period   # 8
+    acfg = cfg.attn
+    hd, Hk, G = acfg.head_dim, cfg.n_kv_heads, acfg.q_groups
+    B, S = shape.global_batch, shape.seq_len
+    policy = sh.lm_policy(mesh, cfg)
+
+    params_abs = jax.tree_util.tree_map(
+        lambda l: _sds(l.shape, jnp.bfloat16), lm_param_shapes(cfg)
+    )
+    p_specs = sh.lm_param_specs(params_abs, cfg, mesh)
+    p_shard = sh.tree_named(mesh, p_specs)
+    n_local = period - 1
+    cspec_full = sh.cache_spec(cfg, shape, mesh)
+    if ring:
+        cache_abs = {
+            "k": _sds((n_groups, B, S, Hk, hd), jnp.bfloat16),      # globals only
+            "v": _sds((n_groups, B, S, Hk, hd), jnp.bfloat16),
+            "rk": _sds((n_groups, n_local, B, W, Hk, hd), jnp.bfloat16),
+            "rv": _sds((n_groups, n_local, B, W, Hk, hd), jnp.bfloat16),
+        }
+        c_shard = {
+            "k": sh.named(mesh, P(None, None, ("data", "model"), None, None)),
+            "v": sh.named(mesh, P(None, None, ("data", "model"), None, None)),
+            "rk": sh.named(mesh, P()),                               # replicated ring
+            "rv": sh.named(mesh, P()),
+        }
+    else:
+        cache_abs = _abstract_tree(jax.eval_shape(lambda: lm_init_cache(cfg, B, S, jnp.bfloat16)))
+        c_shard = jax.tree_util.tree_map(lambda _: sh.named(mesh, cspec_full), cache_abs)
+
+    def attend(q, ck, cv, k_pos, pos, win):
+        # q: (B, H, hd); ck/cv: (B, L, Hk, hd); k_pos: (L,) absolute positions.
+        qg = q.reshape(B, Hk, G, hd) * (hd ** -0.5)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, ck, preferred_element_type=jnp.float32)
+        valid = (k_pos <= pos) & (k_pos > pos - win) & (k_pos >= 0)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgs,bshd->bhgd", w.astype(cv.dtype), cv).reshape(B, 1, Hk * G * hd)
+
+    def qkv(lp, x, pos):
+        h = rms_norm(x, lp["ln1"])
+        q = rope((h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd), pos[None], acfg.rope_theta)
+        k = rope((h @ lp["attn"]["wk"]).reshape(B, 1, Hk, hd), pos[None], acfg.rope_theta)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, Hk, hd)
+        return q, k, v
+
+    def finish_layer(x, lp, attn):
+        x = x + attn @ lp["attn"]["wo"]
+        h2 = rms_norm(x, lp["ln2"])
+        f, _ = _ffn(lp, h2, cfg, policy)
+        return x + f
+
+    def local_layer(x, lp, rk, rv, pos):
+        q, k, v = qkv(lp, x, pos)
+        slot = pos % W
+        rk = jax.lax.dynamic_update_slice(rk, k, (0, slot, 0, 0))
+        rv = jax.lax.dynamic_update_slice(rv, v, (0, slot, 0, 0))
+        # Slot j holds absolute position pos − ((pos − j) mod W); always
+        # inside the window, invalid only before warmup (p_j < 0).
+        j = jnp.arange(W)
+        k_pos = pos - ((pos - j) % W)
+        attn = attend(q[:, 0], rk, rv, k_pos, pos, W)
+        return finish_layer(x, lp, attn), rk, rv
+
+    def global_layer(x, lp, ck, cv, pos):
+        q, k, v = qkv(lp, x, pos)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        attn = attend(q[:, 0], ck, cv, jnp.arange(S), pos, S + 1)
+        return finish_layer(x, lp, attn), ck, cv
+
+    def sliced_layer(x, lp, ck, cv, pos):
+        """t4-a variant: window via dynamic_slice of the sharded full cache."""
+        q, k, v = qkv(lp, x, pos)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        start = jnp.clip(pos - W + 1, 0, S - W)
+        ck_s = jax.lax.dynamic_slice(ck, (0, start, 0, 0), (B, W, Hk, hd))
+        cv_s = jax.lax.dynamic_slice(cv, (0, start, 0, 0), (B, W, Hk, hd))
+        attn = attend(q[:, 0], ck_s, cv_s, start + jnp.arange(W), pos, W)
+        return finish_layer(x, lp, attn), ck, cv
+
+    def decode_step(params, cache, token, pos):
+        x = params["embed"][token][:, None, :] * (cfg.d_model ** 0.5)
+        grp = jax.tree_util.tree_map(
+            lambda l: l.reshape(n_groups, period, *l.shape[1:]), params["layers"]
+        )
+        if ring:
+            carry_xs = (grp, cache["k"], cache["v"], cache["rk"], cache["rv"])
+        else:
+            ck_g = cache["k"].reshape(n_groups, period, B, S, Hk, hd)
+            cv_g = cache["v"].reshape(n_groups, period, B, S, Hk, hd)
+            carry_xs = (grp, ck_g, cv_g)
+
+        def group(x, xs):
+            if ring:
+                gp, gk, gv, rk, rv = xs
+                new_rk, new_rv = [], []
+                for i in range(n_local):
+                    lp = jax.tree_util.tree_map(lambda l: l[i], gp)
+                    x, k_i, v_i = local_layer(x, lp, rk[i], rv[i], pos)
+                    new_rk.append(k_i)
+                    new_rv.append(v_i)
+                lp = jax.tree_util.tree_map(lambda l: l[n_local], gp)
+                x, gk, gv = global_layer(x, lp, gk, gv, pos)
+                return x, (gk, gv, jnp.stack(new_rk), jnp.stack(new_rv))
+            gp, ck, cv = xs
+            new_k, new_v = [], []
+            for i in range(period):
+                lp = jax.tree_util.tree_map(lambda l: l[i], gp)
+                fn = sliced_layer if i < period - 1 else global_layer
+                x, k_i, v_i = fn(x, lp, ck[i], cv[i], pos)
+                new_k.append(k_i)
+                new_v.append(v_i)
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        x, outs = jax.lax.scan(group, x, carry_xs)
+        x = rms_norm(x, params["final_norm"])
+        logits = (x[:, 0] @ params["embed"].T).astype(jnp.float32)
+        if ring:
+            gk, gv, rk, rv = outs
+            new_cache = {"k": gk, "v": gv, "rk": rk, "rv": rv}
+        else:
+            nk, nv = outs
+            new_cache = {"k": nk.reshape(cfg.n_layers, B, S, Hk, hd),
+                         "v": nv.reshape(cfg.n_layers, B, S, Hk, hd)}
+        return logits, new_cache
+
+    token = _sds((B,), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return Cell(
+        "gemma3-12b", shape.name, "serve_step", decode_step,
+        (params_abs, cache_abs, token, pos),
+        (p_shard, c_shard, sh.named(mesh, P()), sh.named(mesh, P())),
+        (sh.named(mesh, P(None, "model")), c_shard),
+        model_flops=2.0 * cfg.active_param_count() * B,
+        note="two-stack sliding decode" + (" (ring)" if ring else " (slice)"),
+    )
+
+
+def target4_gemma_cache() -> list[dict]:
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh()
+    spec = get_arch("gemma3-12b")
+    shape = spec.shapes["long_500k"]
+    out = []
+    print("[T4] gemma3-12b × long_500k (sliding-window cache reads)")
+    out.append(_measure(build_cell(spec, shape, mesh), mesh, "t4-baseline uniform reads"))
+    print("  hypothesis: the baseline decode reads the full 524k cache in all"
+          " 48 layers; only the 8 global layers need it — slicing the 40"
+          " local layers to their 1024-token window cuts cache-read bytes to"
+          " (8·524288 + 40·1024)/(48·524288) ≈ 17% → predicted ~6× lower"
+          " memory term (the dominant term for this cell).")
+    out.append(_measure(_gemma_twostack_cell(mesh, spec, shape), mesh, "t4-a two-stack sliced reads"))
+    print("  iteration: t4-a REFUTED the slicing route — dynamic_slice across"
+          " the 256-way sequence sharding forces XLA to replicate the cache"
+          " (involuntary-remat warning), blowing the collective term up."
+          " t4-b keeps a separate REPLICATED 1024-slot ring per local layer"
+          " (315 MB total, slot = pos mod W): no cross-shard slicing at all.")
+    out.append(_measure(
+        _gemma_twostack_cell(mesh, spec, shape, ring=True), mesh,
+        "t4-b local ring buffers (replicated)",
+    ))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default="all", choices=["1", "2", "3", "4", "all"])
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args(argv)
+    targets = {
+        "1": [target1_moe], "2": [target2_granite], "3": [target3_pna],
+        "4": [target4_gemma_cache],
+        "all": [target1_moe, target2_granite, target3_pna, target4_gemma_cache],
+    }[args.target]
+    try:
+        with open(args.out) as f:
+            records = json.load(f)
+    except FileNotFoundError:
+        records = {}
+    for t in targets:
+        recs = t()
+        records[t.__name__] = recs
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction (multi-pod dry-run contract, DESIGN.md §6).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. Single-pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model); `pod` composes with
+`data` for gradient reduction / replica serving.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "data_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch-carrying axes: ('pod','data') on the multi-pod mesh."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

@@ -1,0 +1,567 @@
+"""Cell builder: (arch × shape × mesh) → (step_fn, abstract inputs, shardings).
+
+`build_cell` returns everything `dryrun.py` needs to
+``jax.jit(fn, in_shardings, out_shardings).lower(*abstract_inputs)`` with no
+real allocation (every input is a ShapeDtypeStruct, params included — the
+same pattern the assignment's shannon/kernels reference uses).
+
+Step kinds per family:
+  lm/train      — loss + grads + AdamW update        (train_step)
+  lm/prefill    — last-position logits               (serve_step)
+  lm/decode     — one token against the KV cache     (serve_step)
+  gnn/graph     — regression loss + grads + AdamW    (train_step; sampled
+                  cells vmap a block per data shard)
+  recsys/train  — BCE loss + grads + AdamW
+  recsys/serve  — batched logits
+  recsys/retrieval — 1×N candidate scoring
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+from repro.launch import shardings as sh
+from repro.launch.mesh import data_axes
+from repro.train.optimizer import adamw
+
+__all__ = ["Cell", "build_cell"]
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float          # 6·N·D-style useful-FLOPs estimate
+    note: str = ""
+    # Cost correction: XLA cost_analysis counts a rolled lax.scan body ONCE,
+    # so deep layer stacks under-report FLOPs/bytes/collectives. When set,
+    # each entry is (small UNROLLED variant, its group count); the dry-run
+    # fits cost(g) = fixed + g·delta with delta clamped ≥ 0 (XLA's SPMD
+    # choices differ slightly between programs, so a raw two-point
+    # extrapolation can go negative) and evaluates at `cost_groups`. A single
+    # entry means "use its cost verbatim". memory_analysis / compile proof
+    # always come from this Cell's real rolled program.
+    cost_cells: list[tuple["Cell", float]] | None = None
+    cost_groups: float = 1.0
+    donate_argnums: tuple = ()
+
+    def lower(self, mesh):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        with mesh:
+            return jitted.lower(*self.abstract_args)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _abstract_tree(tree):
+    return jax.tree_util.tree_map(lambda l: _sds(l.shape, l.dtype), tree)
+
+
+# ========================================================================= LM
+def _lm_cost_cells(
+    spec: ArchSpec, shape: ShapeSpec, mesh, cfg
+) -> tuple[list[tuple[Cell, float]], float]:
+    """Two small fully-unrolled variants for cost extrapolation.
+
+    period = the layer-pattern repeat (gemma3's 5:1 group, else 1 layer);
+    cost(L) ≈ fixed + (L/period)·delta. We lower g ∈ {2, 4} groups (or
+    {1, 2} when a group is multiple layers) and the dry-run fits the line
+    with the non-negative estimator (see Cell.cost_cells). kv_chunk is
+    raised to seq_len so the attention kv scan is also unrolled (single
+    chunk) inside the cost cells.
+    """
+    period = cfg.global_every or 1
+    if cfg.n_layers % period or cfg.n_layers < 2 * period:
+        period = 1
+    G = cfg.n_layers // period
+    mults = (1, 2) if period > 1 else (2, 4)
+    if G <= mults[1]:
+        return [], float(G)
+    seq = shape.seq_len or cfg.kv_chunk
+    out = []
+    for mult in mults:
+        sub_cfg = dataclasses.replace(
+            cfg,
+            n_layers=mult * period,
+            unroll_layers=True,
+            kv_chunk=max(seq, cfg.kv_chunk),
+        )
+        sub_spec = dataclasses.replace(spec, make_config=lambda s=None, c=sub_cfg: c)
+        out.append((_lm_cell(sub_spec, shape, mesh, _with_cost_cells=False), float(mult)))
+    return out, float(G)
+
+
+def _lm_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, dtype=BF16,
+    _with_cost_cells: bool = True, optimized: bool = False,
+) -> Cell:
+    from repro.models.transformer_lm import (
+        lm_decode_step,
+        lm_init_cache,
+        lm_loss,
+        lm_param_shapes,
+        lm_prefill,
+    )
+
+    cfg = spec.make_config(shape)
+    da = data_axes(mesh)
+    if optimized:
+        # The §Perf findings as defaults: hierarchical MoE dispatch (T1),
+        # remat for train (T2), donation handled below.
+        n_data = int(np.prod([mesh.shape[a] for a in da]))
+        kw = {}
+        if cfg.is_moe:
+            kw["moe_groups"] = n_data
+        if shape.kind == "train":
+            kw["remat"] = True
+        if kw:
+            cfg = dataclasses.replace(cfg, **kw)
+    policy = sh.lm_policy(mesh, cfg)
+    cost_cells, cost_groups = (
+        _lm_cost_cells(spec, shape, mesh, cfg) if _with_cost_cells else (None, 1.0)
+    )
+    params_abs = jax.tree_util.tree_map(
+        lambda l: _sds(l.shape, dtype), lm_param_shapes(cfg)
+    )
+    p_specs = sh.lm_param_specs(params_abs, cfg, mesh)
+    p_shard = sh.tree_named(mesh, p_specs)
+
+    if shape.kind == "train":
+        opt = adamw(lr=3e-4)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        o_shard = sh.tree_named(mesh, _opt_specs(opt_abs, p_specs))
+        tok_shard = sh.named(mesh, P(da, None))
+
+        def train_step(params, opt_state, tokens):
+            loss, grads = jax.value_and_grad(lm_loss)(params, tokens, cfg, policy)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+        tokens = _sds((shape.global_batch, shape.seq_len + 1), I32)
+        return Cell(
+            spec.arch_id, shape.name, "train_step",
+            train_step,
+            (params_abs, opt_abs, tokens),
+            (p_shard, o_shard, tok_shard),
+            (p_shard, o_shard, sh.named(mesh, P())),
+            model_flops=6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len,
+            cost_cells=cost_cells,
+            cost_groups=cost_groups,
+            donate_argnums=(0, 1) if optimized else (),
+        )
+
+    if shape.kind == "prefill":
+        tok_shard = sh.named(mesh, P(da, None))
+
+        def prefill_step(params, tokens):
+            return lm_prefill(params, tokens, cfg, policy)
+
+        tokens = _sds((shape.global_batch, shape.seq_len), I32)
+        return Cell(
+            spec.arch_id, shape.name, "serve_step",
+            prefill_step,
+            (params_abs, tokens),
+            (p_shard, tok_shard),
+            sh.named(mesh, P(da, "model")),
+            model_flops=2.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len,
+            cost_cells=cost_cells,
+            cost_groups=cost_groups,
+        )
+
+    # decode: one new token with a KV cache of seq_len.
+    cache_abs = _abstract_tree(
+        jax.eval_shape(lambda: lm_init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+    )
+    cspec = sh.cache_spec(cfg, shape, mesh)
+    c_shard = jax.tree_util.tree_map(lambda _: sh.named(mesh, cspec), cache_abs)
+    n_data = int(np.prod([mesh.shape[a] for a in da]))
+    tok_spec = P(da) if shape.global_batch % n_data == 0 and shape.global_batch >= n_data else P()
+
+    def decode_step(params, cache, token, pos):
+        return lm_decode_step(params, cache, token, pos, cfg, policy)
+
+    token = _sds((shape.global_batch,), I32)
+    pos = _sds((), I32)
+    return Cell(
+        spec.arch_id, shape.name, "serve_step",
+        decode_step,
+        (params_abs, cache_abs, token, pos),
+        (p_shard, c_shard, sh.named(mesh, tok_spec), sh.named(mesh, P())),
+        (sh.named(mesh, P(tok_spec[0] if len(tok_spec) else None, "model")), c_shard),
+        model_flops=2.0 * cfg.active_param_count() * shape.global_batch,
+        note=f"KV cache {shape.seq_len} tokens, spec {cspec}",
+        cost_cells=cost_cells,
+        cost_groups=cost_groups,
+        donate_argnums=(1,) if optimized else (),   # in-place cache update
+    )
+
+
+def _opt_specs(opt_abs, p_specs):
+    """AdamW state {m, v, step}: m/v mirror param specs; step replicated."""
+    del opt_abs
+    return {"m": p_specs, "v": p_specs, "step": P()}
+
+
+# ======================================================================== GNN
+def _gnn_loss_fn(arch_id: str, cfg, policy: ShardingPolicy, n_loss_nodes: int | None = None):
+    """Regression loss over model output (sliced to the first ``n_loss_nodes``
+    rows for sampled blocks — losses are computed on the seed nodes only)."""
+
+    def _mse(pred, target):
+        if n_loss_nodes is not None:
+            pred = pred[:n_loss_nodes]
+        return jnp.mean(jnp.square(pred - target))
+
+    if arch_id == "egnn":
+        from repro.models.egnn import egnn_forward
+
+        def loss(params, batch):
+            pred, _ = egnn_forward(
+                params, batch["feats"], batch["pos"], batch["senders"],
+                batch["receivers"], cfg, policy,
+            )
+            return _mse(pred, batch["target"])
+    elif arch_id == "graphcast":
+        from repro.models.graphcast import graphcast_forward
+
+        def loss(params, batch):
+            pred = graphcast_forward(
+                params, batch["feats"], batch["edge_feats"], batch["senders"],
+                batch["receivers"], cfg, policy,
+            )
+            return _mse(pred, batch["target"])
+    elif arch_id == "equiformer-v2":
+        from repro.models.equiformer_v2 import equiformer_forward
+
+        def loss(params, batch):
+            pred = equiformer_forward(
+                params, batch["feats"], batch["pos"], batch["senders"],
+                batch["receivers"], cfg, policy,
+            )
+            return _mse(pred, batch["target"])
+    elif arch_id == "pna":
+        from repro.models.pna import pna_forward
+
+        def loss(params, batch):
+            pred = pna_forward(
+                params, batch["feats"], batch["senders"], batch["receivers"], cfg, policy
+            )
+            return _mse(pred, batch["target"])
+    elif arch_id == "coin_gcn":
+        from repro.models.gcn import gcn_loss
+
+        def loss(params, batch):
+            return gcn_loss(
+                params, batch["feats"], batch["senders"], batch["receivers"],
+                batch["edge_weight"], batch["labels"], batch["label_mask"], cfg, policy,
+            )
+    else:
+        raise KeyError(arch_id)
+    return loss
+
+
+def _gnn_params(arch_id: str, cfg, dtype):
+    key = jax.random.PRNGKey(0)
+    if arch_id == "egnn":
+        from repro.models.egnn import egnn_init
+
+        return jax.eval_shape(lambda k: egnn_init(k, cfg, dtype), key)
+    if arch_id == "graphcast":
+        from repro.models.graphcast import graphcast_init
+
+        return jax.eval_shape(lambda k: graphcast_init(k, cfg, dtype), key)
+    if arch_id == "equiformer-v2":
+        from repro.models.equiformer_v2 import equiformer_init
+
+        return jax.eval_shape(lambda k: equiformer_init(k, cfg, dtype), key)
+    if arch_id == "pna":
+        from repro.models.pna import pna_init
+
+        return jax.eval_shape(lambda k: pna_init(k, cfg, dtype), key)
+    if arch_id == "coin_gcn":
+        from repro.models.gcn import gcn_init
+
+        return jax.eval_shape(lambda k: gcn_init(k, cfg, dtype), key)
+    raise KeyError(arch_id)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _gnn_sizes(shape: ShapeSpec, pad_mult: int) -> tuple[int, int]:
+    """(nodes, edges) of the device graph: packed for molecule batches,
+    fanout-expanded for sampled blocks, padded to the shard divisor."""
+    if shape.batch_nodes is not None:       # sampled block
+        n, e, frontier = shape.batch_nodes, 0, shape.batch_nodes
+        for f in shape.fanout:
+            e += frontier * f
+            frontier *= f
+            n += frontier
+    elif shape.n_graphs is not None:        # packed small-graph batch
+        n, e = shape.n_nodes * shape.n_graphs, shape.n_edges * shape.n_graphs
+    else:                                   # one full graph
+        n, e = shape.n_nodes, shape.n_edges
+    return _pad_to(n, pad_mult), _pad_to(e, pad_mult)
+
+
+def _gnn_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, n_blocks: int | None, pad_mult: int):
+    """Abstract batch dict. n_blocks=None → single global graph; else a
+    leading block axis (one sampled block per data shard)."""
+    n, e = _gnn_sizes(shape, pad_mult if n_blocks is None else 1)
+    lead = () if n_blocks is None else (n_blocks,)
+    batch = {
+        "feats": _sds(lead + (n, shape.d_feat), F32),
+        "senders": _sds(lead + (e,), I32),
+        "receivers": _sds(lead + (e,), I32),
+    }
+    if arch_id in ("egnn", "equiformer-v2"):
+        batch["pos"] = _sds(lead + (n, 3), F32)
+    if arch_id == "graphcast":
+        batch["edge_feats"] = _sds(lead + (e, cfg.d_edge_in), F32)
+    if arch_id == "coin_gcn":
+        batch["edge_weight"] = _sds(lead + (e,), F32)
+        batch["labels"] = _sds(lead + (n,), I32)
+        batch["label_mask"] = _sds(lead + (n,), F32)
+    else:
+        n_out = cfg.n_vars if arch_id == "graphcast" else getattr(cfg, "d_out", 1)
+        n_tgt = shape.batch_nodes if n_blocks is not None else n
+        batch["target"] = _sds(lead + (n_tgt, n_out), F32)
+    return batch
+
+
+def _gnn_flops(arch_id: str, shape: ShapeSpec, cfg) -> float:
+    """Useful forward FLOPs (2 × MACs of the defining matmuls per arch)."""
+    n, e = float(shape.n_nodes), float(shape.n_edges)
+    L = cfg.n_layers
+    if arch_id == "equiformer-v2":
+        C, lmax, mmax = cfg.d_hidden, cfg.l_max, cfg.m_max
+        K = (lmax + 1) ** 2
+        so2 = ((lmax + 1) * C) ** 2 + 2 * sum(
+            2 * ((lmax + 1 - m) * C) ** 2 for m in range(1, mmax + 1)
+        )
+        rot = 2 * sum((2 * l + 1) ** 2 for l in range(lmax + 1)) * C   # D + Dᵀ apply
+        attn = (2 * C + cfg.n_rbf) * C + C * cfg.n_heads
+        ffn_n = C * 2 * C + 2 * C * C + lmax * C * C                   # scalar MLP + per-l mix
+        return 2.0 * L * (e * (so2 + rot + attn) + n * ffn_n)
+    if arch_id == "egnn":
+        d = cfg.d_hidden
+        per_e = (2 * d + 1) * d + d * d + (d * d + d)                  # φ_e (2-layer) + φ_x
+        per_n = 2 * d * d + d * d                                      # φ_h
+        return 2.0 * L * (e * per_e + n * per_n)
+    if arch_id == "graphcast":
+        d = cfg.d_hidden
+        per_e = 3 * d * d + d * d
+        per_n = 2 * d * d + d * d
+        return 2.0 * L * (e * per_e + n * per_n)
+    if arch_id == "pna":
+        d = cfg.d_hidden
+        per_e = 2 * d * d                                              # pre-MLP on (h_i‖h_j)
+        per_n = (1 + cfg.n_agg_feats) * d * d                          # post-MLP on 13·d concat
+        return 2.0 * L * (e * per_e + n * per_n)
+    if arch_id == "coin_gcn":
+        total = 0.0
+        for d_in, d_out in zip(cfg.layer_dims[:-1], cfg.layer_dims[1:]):
+            total += n * d_in * d_out + e * d_out                      # feature-first
+        return 2.0 * total
+    d = getattr(cfg, "d_hidden", 512)
+    return 2.0 * L * (n * d * d + e * d)
+
+
+def _sampled_edges(shape: ShapeSpec) -> int:
+    e, frontier = 0, shape.batch_nodes
+    for f in shape.fanout:
+        e += frontier * f
+        frontier *= f
+    return e
+
+
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32, _as_cost_cell: bool = False) -> Cell:
+    import dataclasses as dc
+
+    cfg = spec.make_config(shape)
+    cost_cells = None
+    big = (shape.n_edges or 0) > 2_000_000
+    if (
+        spec.arch_id == "equiformer-v2" and big and not _as_cost_cell
+        and getattr(cfg, "edge_chunk", None) is None
+    ):
+        # Real program: 64 rolled chunks bound the (chunk, K, C) irrep tensor.
+        # Cost cell: the unchunked variant — its HLO is fully counted by
+        # cost_analysis (the rolled chunk scan body would be counted once).
+        flat_spec = dc.replace(spec, make_config=lambda s=None, c=cfg: c)
+        cost_cells = [(_gnn_cell(flat_spec, shape, mesh, dtype, _as_cost_cell=True), 1.0)]
+        cfg = dc.replace(cfg, edge_chunk=-(-shape.n_edges // 64))
+    da = data_axes(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in da]))
+    msize = mesh.shape["model"]
+    sampled = shape.batch_nodes is not None
+    n_blocks = n_data if sampled else None
+    policy = NO_POLICY if sampled else sh.gnn_policy(mesh, batched=False)
+
+    params_abs = _gnn_params(spec.arch_id, cfg, dtype)
+    p_specs = sh.replicated_specs(params_abs)
+    p_shard = sh.tree_named(mesh, p_specs)
+    loss_fn = _gnn_loss_fn(
+        spec.arch_id, cfg, policy, n_loss_nodes=shape.batch_nodes if sampled else None
+    )
+    batch_abs = _gnn_batch_abstract(spec.arch_id, shape, cfg, n_blocks, pad_mult=msize)
+
+    if sampled:
+        batch_spec = jax.tree_util.tree_map(
+            lambda l: sh.named(mesh, P(da, *([None] * (len(l.shape) - 1)))), batch_abs
+        )
+
+        def total_loss(params, batch):
+            losses = jax.vmap(lambda b: loss_fn(params, b))(batch)
+            return jnp.mean(losses)
+    else:
+        def node_or_edge_spec(l):
+            # Shard the big axis (nodes or edges) over `model`.
+            return sh.named(mesh, P("model", *([None] * (len(l.shape) - 1))))
+
+        batch_spec = jax.tree_util.tree_map(node_or_edge_spec, batch_abs)
+        total_loss = loss_fn
+
+    opt = adamw(lr=1e-3)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_shard = sh.tree_named(mesh, _opt_specs(opt_abs, p_specs))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(total_loss)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    # train = fwd + bwd ≈ 3× forward FLOPs; sampled cells run one block per
+    # data shard, so FLOPs count block sizes, not the full graph.
+    if sampled:
+        blk = dataclasses.replace(
+            shape,
+            n_nodes=int(batch_abs["feats"].shape[1]) * n_blocks,
+            n_edges=int(batch_abs["senders"].shape[1]) * n_blocks,
+        )
+        flops = _gnn_flops(spec.arch_id, blk, cfg) * 3.0
+    else:
+        flops = _gnn_flops(spec.arch_id, shape, cfg) * 3.0
+    return Cell(
+        spec.arch_id, shape.name, "train_step",
+        train_step,
+        (params_abs, opt_abs, batch_abs),
+        (p_shard, o_shard, batch_spec),
+        (p_shard, o_shard, sh.named(mesh, P())),
+        model_flops=flops,
+        note="sampled blocks ×%d" % (n_blocks or 1) if sampled else "full graph",
+        cost_cells=cost_cells,
+    )
+
+
+# ===================================================================== recsys
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32) -> Cell:
+    from repro.models.deepfm import (
+        deepfm_forward,
+        deepfm_init,
+        deepfm_loss,
+        deepfm_retrieval,
+    )
+
+    cfg = spec.make_config(shape)
+    da = data_axes(mesh)
+    policy = sh.recsys_policy(mesh)
+    params_abs = jax.eval_shape(lambda k: deepfm_init(k, cfg, dtype), jax.random.PRNGKey(0))
+    p_specs = sh.recsys_param_specs(params_abs)
+    p_shard = sh.tree_named(mesh, p_specs)
+    mlp_flops = 2.0 * sum(
+        a * b for a, b in zip(
+            (cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims), (*cfg.mlp_dims, 1)
+        )
+    )
+    per_ex = mlp_flops + 4.0 * cfg.n_fields * cfg.embed_dim
+
+    if shape.kind == "train":
+        opt = adamw(lr=1e-3)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        o_shard = sh.tree_named(mesh, _opt_specs(opt_abs, p_specs))
+
+        def train_step(params, opt_state, ids, labels):
+            loss, grads = jax.value_and_grad(deepfm_loss)(params, ids, labels, cfg, policy)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+        ids = _sds((shape.batch, cfg.n_fields), I32)
+        labels = _sds((shape.batch,), F32)
+        bspec = sh.named(mesh, P(da, None))
+        return Cell(
+            spec.arch_id, shape.name, "train_step",
+            train_step,
+            (params_abs, opt_abs, ids, labels),
+            (p_shard, o_shard, bspec, sh.named(mesh, P(da))),
+            (p_shard, o_shard, sh.named(mesh, P())),
+            model_flops=3.0 * per_ex * shape.batch,
+        )
+
+    if shape.kind == "retrieval":
+        def retrieval_step(params, user_ids, cand_ids):
+            return deepfm_retrieval(params, user_ids, cand_ids, cfg, policy)
+
+        user = _sds((shape.batch, cfg.n_fields), I32)
+        cands = _sds((shape.batch, shape.n_candidates), I32)
+        return Cell(
+            spec.arch_id, shape.name, "serve_step",
+            retrieval_step,
+            (params_abs, user, cands),
+            (p_shard, sh.named(mesh, P(None, None)), sh.named(mesh, P(None, "model"))),
+            sh.named(mesh, P(None, "model")),
+            model_flops=2.0 * shape.batch * shape.n_candidates * cfg.d_tower,
+        )
+
+    def serve_step(params, ids):
+        return deepfm_forward(params, ids, cfg, policy)
+
+    ids = _sds((shape.batch, cfg.n_fields), I32)
+    big = shape.batch >= int(np.prod([mesh.shape[a] for a in da]))
+    bspec = sh.named(mesh, P(da, None) if big else P(None, None))
+    return Cell(
+        spec.arch_id, shape.name, "serve_step",
+        serve_step,
+        (params_abs, ids),
+        (p_shard, bspec),
+        sh.named(mesh, P(da) if big else P()),
+        model_flops=per_ex * shape.batch,
+    )
+
+
+# ==================================================================== factory
+def build_cell(spec: ArchSpec, shape: ShapeSpec, mesh, optimized: bool = False) -> Cell:
+    """optimized=True applies the §Perf findings (hierarchical MoE dispatch,
+    remat on train, param/opt/cache donation) — the beyond-paper variants
+    recorded separately from the baselines in EXPERIMENTS.md."""
+    if spec.family == "lm":
+        return _lm_cell(spec, shape, mesh, optimized=optimized)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape, mesh)
+    raise KeyError(spec.family)

@@ -1,0 +1,26 @@
+"""Model zoo: the paper's GCN + the 10 assigned architectures."""
+
+from repro.models.gcn import GCNConfig, gcn_init, gcn_forward, gcn_loss
+from repro.models.transformer_lm import (
+    LMConfig,
+    lm_init,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+    lm_decode_step,
+    lm_init_cache,
+)
+
+__all__ = [
+    "GCNConfig",
+    "gcn_init",
+    "gcn_forward",
+    "gcn_loss",
+    "LMConfig",
+    "lm_init",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "lm_init_cache",
+]

@@ -1,0 +1,103 @@
+"""DeepFM [arXiv:1703.04247] — FM interaction ∥ deep MLP over shared
+field embeddings.
+
+Assigned config: n_sparse=39 fields, embed_dim=10, MLP 400-400-400,
+FM interaction. Four serving/training shapes (train 65 536, p99 512,
+bulk 262 144, retrieval 1×1 000 000 candidates).
+
+FM second-order term uses the linearized identity (the same "reorder the
+math" trick as COIN's dataflow — DESIGN.md §4):
+    Σ_{i<j} ⟨v_i, v_j⟩ = ½ (‖Σ_i v_i‖² − Σ_i ‖v_i‖²)      — O(F·D), not O(F²·D)
+and is also provided as a Pallas kernel (`repro.kernels.fm_interaction`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+from repro.nn.layers import mlp_apply, mlp_init
+from repro.recsys.embedding import field_lookup
+
+__all__ = ["DeepFMConfig", "deepfm_init", "deepfm_forward", "deepfm_loss", "deepfm_retrieval"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    n_fields: int = 39
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    rows_per_field: int = 100_000     # hashed bucket size per field
+    d_tower: int = 64                 # retrieval tower width
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_fields * self.rows_per_field
+
+    @property
+    def field_offsets(self):
+        import numpy as np
+
+        return np.arange(self.n_fields, dtype=np.int32) * self.rows_per_field
+
+
+def deepfm_init(key: jax.Array, cfg: DeepFMConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dims = [cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims, 1]
+    return {
+        "table": jax.random.normal(k1, (cfg.total_rows, cfg.embed_dim), dtype) * 0.01,
+        "w_linear": jax.random.normal(k2, (cfg.total_rows,), dtype) * 0.01,
+        "bias": jnp.zeros((), dtype),
+        "mlp": mlp_init(k3, dims, dtype),
+        "user_tower": mlp_init(k4, [cfg.n_fields * cfg.embed_dim, cfg.d_tower], dtype),
+        "item_proj": jax.random.normal(k5, (cfg.embed_dim, cfg.d_tower), dtype) * 0.1,
+    }
+
+
+def fm_interaction(emb: jnp.ndarray) -> jnp.ndarray:
+    """(B, F, D) → (B,) second-order FM term via the linearized identity."""
+    s = emb.sum(axis=1)                       # (B, D)
+    sq = (emb * emb).sum(axis=1)              # (B, D)
+    return 0.5 * (s * s - sq).sum(axis=-1)
+
+
+def deepfm_forward(
+    params: dict,
+    ids: jnp.ndarray,                          # (B, F) per-field hashed ids
+    cfg: DeepFMConfig,
+    policy: ShardingPolicy = NO_POLICY,
+) -> jnp.ndarray:
+    offs = jnp.asarray(cfg.field_offsets)
+    emb = field_lookup(params["table"], ids, offs)     # (B, F, D)
+    emb = policy.constrain(emb, "emb")
+    first = jnp.take(params["w_linear"], (ids + offs[None, :]).reshape(-1)).reshape(ids.shape).sum(-1)
+    second = fm_interaction(emb)
+    deep = mlp_apply(params["mlp"], emb.reshape(ids.shape[0], -1))[:, 0]
+    return first + second + deep + params["bias"]
+
+
+def deepfm_loss(params, ids, labels, cfg, policy=NO_POLICY) -> jnp.ndarray:
+    """Binary cross-entropy on click labels (stable logit form)."""
+    logits = deepfm_forward(params, ids, cfg, policy)
+    z = jnp.clip(logits, -30.0, 30.0)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def deepfm_retrieval(
+    params: dict,
+    user_ids: jnp.ndarray,                     # (B, F)
+    cand_ids: jnp.ndarray,                     # (B, Ncand) item ids (field 0)
+    cfg: DeepFMConfig,
+    policy: ShardingPolicy = NO_POLICY,
+) -> jnp.ndarray:
+    """Retrieval scoring: user tower vs N candidates as ONE batched matmul
+    (the assigned `retrieval_cand` cell: 1 query × 10⁶ candidates)."""
+    offs = jnp.asarray(cfg.field_offsets)
+    emb = field_lookup(params["table"], user_ids, offs)
+    u = mlp_apply(params["user_tower"], emb.reshape(user_ids.shape[0], -1))  # (B, T)
+    cand = jnp.take(params["table"], cand_ids.reshape(-1), axis=0)
+    cand = cand.reshape(*cand_ids.shape, cfg.embed_dim) @ params["item_proj"]  # (B, N, T)
+    cand = policy.constrain(cand, "cand")
+    return jnp.einsum("bt,bnt->bn", u, cand)

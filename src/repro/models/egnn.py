@@ -1,0 +1,77 @@
+"""EGNN — E(n)-Equivariant Graph Neural Network [arXiv:2102.09844].
+
+Assigned config: 4 layers, d_hidden=64, E(n) equivariance. Per layer:
+
+  m_ij  = φ_e(h_i, h_j, ‖x_i − x_j‖²)
+  x_i' = x_i + (1/deg) Σ_j (x_i − x_j) · φ_x(m_ij)      (coordinate update)
+  h_i' = φ_h(h_i, Σ_j m_ij)                              (feature update)
+
+Equivariance holds because coordinates enter only through squared distances
+and relative vectors (property-tested in tests/test_models_gnn.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+from repro.graph.ops import degrees
+from repro.nn.layers import mlp_apply, mlp_init
+
+__all__ = ["EGNNConfig", "egnn_init", "egnn_forward", "egnn_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    d_out: int = 1
+    coord_clamp: float = 100.0
+
+
+def egnn_init(key: jax.Array, cfg: EGNNConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    p: dict = {"enc": mlp_init(keys[0], [cfg.d_in, d], dtype)}
+    for i in range(cfg.n_layers):
+        p[f"phi_e{i}"] = mlp_init(keys[3 * i + 1], [2 * d + 1, d, d], dtype)
+        p[f"phi_x{i}"] = mlp_init(keys[3 * i + 2], [d, d, 1], dtype)
+        p[f"phi_h{i}"] = mlp_init(keys[3 * i + 3], [2 * d, d, d], dtype)
+    p["dec"] = mlp_init(keys[-1], [d, d, cfg.d_out], dtype)
+    return p
+
+
+def egnn_forward(
+    params: dict,
+    h: jnp.ndarray,            # (N, d_in) node features
+    x: jnp.ndarray,            # (N, 3) coordinates
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    cfg: EGNNConfig,
+    policy: ShardingPolicy = NO_POLICY,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n = h.shape[0]
+    h = mlp_apply(params["enc"], h)
+    deg = jnp.maximum(degrees(receivers, n), 1.0)
+    for i in range(cfg.n_layers):
+        rel = x[receivers] - x[senders]                      # (E, 3)
+        d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+        m_in = jnp.concatenate([h[receivers], h[senders], d2], axis=-1)
+        m = mlp_apply(params[f"phi_e{i}"], m_in)             # (E, d)
+        # Coordinate update (equivariant): weighted relative vectors.
+        cw = jnp.clip(mlp_apply(params[f"phi_x{i}"], m), -cfg.coord_clamp, cfg.coord_clamp)
+        dx = jax.ops.segment_sum(rel * cw, receivers, num_segments=n)
+        x = x + dx / deg[:, None]
+        # Feature update (invariant).
+        magg = jax.ops.segment_sum(m, receivers, num_segments=n)
+        h = h + mlp_apply(params[f"phi_h{i}"], jnp.concatenate([h, magg], axis=-1))
+        h = policy.constrain(h, "node_hidden")
+    return mlp_apply(params["dec"], h), x
+
+
+def egnn_loss(params, h, x, senders, receivers, target, cfg, policy=NO_POLICY) -> jnp.ndarray:
+    pred, _ = egnn_forward(params, h, x, senders, receivers, cfg, policy)
+    return jnp.mean(jnp.square(pred - target))

@@ -1,0 +1,129 @@
+"""The paper's GCN (Kipf–Welling [11]) with the COIN dataflow (§IV-C).
+
+Each layer computes O = Ã · X · W with the multiplication order chosen by
+the COIN rule (feature-extraction first when d_out < d_in — §IV-C3), optional
+fake quantization of weights/activations (§V-B, Fig. 7), and three
+aggregation backends:
+
+  * "segment" — jax.ops.segment_sum over the edge list (reference; sparse),
+  * "bsr"     — the 128×128 blocked Pallas SpMM (COIN crossbar→MXU mapping),
+  * "dense"   — dense Ã matmul (the paper's crossbars store zeros too; used
+                by the FLOP-accounting benchmarks, not for large graphs).
+
+The layer-output broadcast of the COIN schedule (Fig. 5c) appears under pjit
+as the all-gather XLA inserts for the gather of node-sharded Z along edges —
+see `repro.launch.shardings` and DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import choose_order
+from repro.core.quant import QuantConfig, fake_quant
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+from repro.graph.ops import aggregate_padded
+
+__all__ = ["GCNConfig", "gcn_init", "gcn_forward", "gcn_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    layer_dims: tuple[int, ...]            # (F_in, hidden..., n_labels)
+    dataflow: str = "auto"                 # auto | feature_first | aggregation_first
+    quant: QuantConfig = QuantConfig(enabled=False)
+    backend: str = "segment"               # segment | bsr | dense
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_dims) - 1
+
+
+def gcn_init(key: jax.Array, cfg: GCNConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.n_layers)
+    params = {}
+    for i, (d_in, d_out) in enumerate(zip(cfg.layer_dims[:-1], cfg.layer_dims[1:])):
+        std = (2.0 / (d_in + d_out)) ** 0.5
+        params[f"w{i}"] = jax.random.normal(keys[i], (d_in, d_out), dtype) * std
+        params[f"b{i}"] = jnp.zeros((d_out,), dtype)
+    return params
+
+
+def _order(cfg: GCNConfig, n_nodes: int, d_in: int, d_out: int, n_edges: int) -> str:
+    if cfg.dataflow != "auto":
+        return cfg.dataflow
+    return choose_order(n_nodes, d_in, d_out, n_edges=n_edges)
+
+
+def gcn_forward(
+    params: dict,
+    x: jnp.ndarray,                        # (N, F)
+    senders: jnp.ndarray,                  # (E_pad,)
+    receivers: jnp.ndarray,                # (E_pad,)
+    edge_weight: jnp.ndarray,              # (E_pad,)
+    cfg: GCNConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    adjacency=None,                        # BlockedAdjacency arrays for "bsr"
+    dense_adj: jnp.ndarray | None = None,  # (N, N) for "dense"
+) -> jnp.ndarray:
+    n_nodes = x.shape[0]
+    n_edges = int(senders.shape[0])
+    q = cfg.quant
+
+    def agg(z: jnp.ndarray) -> jnp.ndarray:
+        if cfg.backend == "segment":
+            return aggregate_padded(z, senders, receivers, n_nodes, edge_weight)
+        if cfg.backend == "dense":
+            assert dense_adj is not None
+            return dense_adj @ z
+        if cfg.backend == "bsr":
+            from repro.kernels.ops import bsr_spmm
+
+            block_vals, block_cols = adjacency
+            out = bsr_spmm(block_vals, block_cols, z)
+            return out[:n_nodes]
+        raise ValueError(cfg.backend)
+
+    h = x
+    for i in range(cfg.n_layers):
+        w = params[f"w{i}"]
+        if q.enabled:
+            w = fake_quant(w, q.weight_bits)
+            h = fake_quant(h, q.act_bits, percentile=q.act_percentile)
+        d_in, d_out = w.shape
+        order = _order(cfg, n_nodes, d_in, d_out, n_edges)
+        if order == "feature_first":
+            z = h @ w                       # feature extraction (Fig. 5a)
+            z = policy.constrain(z, "node_hidden")
+            h = agg(z)                      # aggregation (Fig. 5b)
+        else:
+            z = agg(h)
+            z = policy.constrain(z, "node_hidden")
+            h = z @ w
+        h = h + params[f"b{i}"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)              # activation unit (Fig. 3b)
+        h = policy.constrain(h, "node_hidden")
+    return h
+
+
+def gcn_loss(
+    params: dict,
+    x: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_weight: jnp.ndarray,
+    labels: jnp.ndarray,                   # (N,) int32
+    label_mask: jnp.ndarray,               # (N,) float32
+    cfg: GCNConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    **fw_kwargs,
+) -> jnp.ndarray:
+    logits = gcn_forward(params, x, senders, receivers, edge_weight, cfg, policy, **fw_kwargs)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    per_node = (lse - gold) * label_mask
+    return per_node.sum() / jnp.maximum(label_mask.sum(), 1.0)

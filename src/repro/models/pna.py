@@ -1,0 +1,80 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+Assigned config: 4 layers, d_hidden=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation. Each layer:
+
+  m_ij = M(h_i, h_j)            (pre-transform MLP on endpoint features)
+  agg  = ⨁ (4 aggregators × 3 degree scalers) → 12·d concat
+  h_i' = U(h_i ‖ agg)           (post-transform) + residual
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+from repro.graph.ops import degrees, multi_aggregate_edges
+from repro.nn.layers import dense_init, linear
+
+__all__ = ["PNAConfig", "pna_init", "pna_forward", "pna_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 16
+    d_out: int = 1
+    mean_log_degree: float = 2.5   # the PNA δ normalizer (train-set statistic)
+
+    @property
+    def n_agg_feats(self) -> int:
+        return 4 * 3  # aggregators × scalers
+
+
+def pna_init(key: jax.Array, cfg: PNAConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 2 * cfg.n_layers + 2)
+    p: dict = {"enc": dense_init(keys[0], cfg.d_in, cfg.d_hidden, dtype=dtype)}
+    for i in range(cfg.n_layers):
+        p[f"pre{i}"] = dense_init(keys[2 * i + 1], 2 * cfg.d_hidden, cfg.d_hidden, dtype=dtype)
+        p[f"post{i}"] = dense_init(
+            keys[2 * i + 2], cfg.d_hidden * (1 + cfg.n_agg_feats), cfg.d_hidden, dtype=dtype
+        )
+    p["dec"] = dense_init(keys[-1], cfg.d_hidden, cfg.d_out, dtype=dtype)
+    return p
+
+
+def pna_forward(
+    params: dict,
+    x: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    cfg: PNAConfig,
+    policy: ShardingPolicy = NO_POLICY,
+) -> jnp.ndarray:
+    n = x.shape[0]
+    h = jax.nn.relu(linear(params["enc"], x))
+    deg = degrees(receivers, n)
+    logd = jnp.log1p(deg)[:, None]
+    amp = logd / cfg.mean_log_degree
+    att = cfg.mean_log_degree / jnp.maximum(logd, 1e-6)
+    for i in range(cfg.n_layers):
+        msg_in = jnp.concatenate([h[senders], h[receivers]], axis=-1)
+        msg = jax.nn.relu(linear(params[f"pre{i}"], msg_in))
+        # Aggregate the transformed messages by receiver.
+        aggs = multi_aggregate_edges(msg, receivers, n)
+        feats = []
+        for a in ("mean", "max", "min", "std"):
+            v = aggs[a]
+            feats += [v, v * amp, v * att]
+        z = jnp.concatenate([h] + feats, axis=-1)
+        h = h + jax.nn.relu(linear(params[f"post{i}"], z))
+        h = policy.constrain(h, "node_hidden")
+    return linear(params["dec"], h)
+
+
+def pna_loss(params, x, senders, receivers, target, cfg, policy=NO_POLICY) -> jnp.ndarray:
+    pred = pna_forward(params, x, senders, receivers, cfg, policy)
+    return jnp.mean(jnp.square(pred - target))

@@ -1,0 +1,41 @@
+"""Neural-net layer library (pure-functional, pytree params)."""
+
+from repro.nn.layers import (
+    dense_init,
+    linear,
+    rms_norm,
+    layer_norm,
+    mlp_init,
+    mlp_apply,
+    gelu,
+    silu,
+)
+from repro.nn.attention import (
+    AttentionConfig,
+    attention_init,
+    attention_apply,
+    attention_decode,
+    rope,
+    init_kv_cache,
+)
+from repro.nn.moe import MoEConfig, moe_init, moe_apply
+
+__all__ = [
+    "dense_init",
+    "linear",
+    "rms_norm",
+    "layer_norm",
+    "mlp_init",
+    "mlp_apply",
+    "gelu",
+    "silu",
+    "AttentionConfig",
+    "attention_init",
+    "attention_apply",
+    "attention_decode",
+    "rope",
+    "init_kv_cache",
+    "MoEConfig",
+    "moe_init",
+    "moe_apply",
+]

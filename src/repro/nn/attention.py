@@ -1,0 +1,190 @@
+"""GQA attention: RoPE, causal/sliding-window masks, chunked (flash-style)
+training path, and a KV-cache decode path.
+
+The training/prefill path scans over key/value chunks with an online softmax
+(running max + normalizer), so peak memory is O(S·chunk) instead of O(S²) —
+required for the 32k prefill and 500k cells, and the exact algorithm the
+Pallas kernel (`repro.kernels.flash_attention`) implements on TPU. Sliding
+windows are expressed as a *traced* per-layer window size so a stack of
+mixed local/global layers (gemma3's 5:1) lowers as a single lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AttentionConfig",
+    "attention_init",
+    "attention_apply",
+    "attention_decode",
+    "rope",
+    "init_kv_cache",
+]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int | None = None
+    rope_theta: float = 10_000.0
+    kv_chunk: int = 1024            # online-softmax chunk length
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+def attention_init(key: jax.Array, cfg: AttentionConfig, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    std = (1.0 / d) ** 0.5
+    return {
+        "wq": jax.random.normal(kq, (d, cfg.n_heads * hd), dtype) * std,
+        "wk": jax.random.normal(kk, (d, cfg.n_kv_heads * hd), dtype) * std,
+        "wv": jax.random.normal(kv, (d, cfg.n_kv_heads * hd), dtype) * std,
+        "wo": jax.random.normal(ko, (cfg.n_heads * hd, d), dtype) * std,
+    }
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :].astype(x.dtype)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(p: dict, x: jnp.ndarray, cfg: AttentionConfig, positions: jnp.ndarray):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(
+    q: jnp.ndarray,          # (B, Sq, H, Dh)
+    k: jnp.ndarray,          # (B, Sk, Hk, Dh)
+    v: jnp.ndarray,          # (B, Sk, Hk, Dh)
+    q_positions: jnp.ndarray,  # (Sq,)
+    window: jnp.ndarray | int,  # attend to q_pos-window < k_pos <= q_pos
+    chunk: int,
+) -> jnp.ndarray:
+    B, Sq, H, Dh = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hk, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hk, Dh).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(B, Sq, Hk, G, Dh) * (Dh ** -0.5)
+    win = jnp.asarray(window, jnp.int32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        # (B, Hk, G, Sq, C)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kb, preferred_element_type=jnp.float32)
+        valid = (k_pos[None, :] <= q_positions[:, None]) & (
+            k_pos[None, :] > q_positions[:, None] - win
+        ) & (k_pos[None, :] < Sk)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(vb.dtype), vb)
+        acc_new = acc * scale[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Sq, Dh), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    # (B, Hk, G, Sq, Dh) -> (B, Sq, H, Dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh)
+
+
+def attention_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: AttentionConfig,
+    window: jnp.ndarray | int | None = None,
+    positions: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) self-attention for train/prefill."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    if window is None:
+        window = S
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _chunked_attention(q, k, v, positions, window, cfg.kv_chunk)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_kv_cache(
+    batch: int, max_len: int, cfg: AttentionConfig, n_layers: int, dtype=jnp.float32
+) -> dict:
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,              # (B, 1, D) current token embedding
+    layer_cache: dict,           # {"k","v"}: (B, Smax, Hk, Dh) for THIS layer
+    pos: jnp.ndarray,            # scalar int32 current position
+    cfg: AttentionConfig,
+    window: jnp.ndarray | int | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step against a per-layer KV cache; returns (out, new_cache)."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    positions = pos[None] if pos.ndim == 0 else pos
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, pos, 0, 0))
+    Smax, Hk = ck.shape[1], cfg.n_kv_heads
+    G = cfg.q_groups
+    win = jnp.asarray(Smax if window is None else window, jnp.int32)
+    qg = q.reshape(B, Hk, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, ck, preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(Smax)
+    valid = (k_pos <= pos) & (k_pos > pos - win)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(cv.dtype), cv)
+    out = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,67 @@
+"""Basic layers: linear, norms, MLPs — functional style, dict pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "linear",
+    "rms_norm",
+    "layer_norm",
+    "mlp_init",
+    "mlp_apply",
+    "gelu",
+    "silu",
+]
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, scale: str = "fan_in", dtype=jnp.float32) -> dict:
+    if scale == "fan_in":
+        std = (1.0 / d_in) ** 0.5
+    elif scale == "fan_avg":
+        std = (2.0 / (d_in + d_out)) ** 0.5
+    else:
+        std = float(scale)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(std, dtype)
+    return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return out * gamma
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return out * gamma + beta
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(x)
+
+
+def mlp_init(key: jax.Array, dims: list[int], dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_init(k, dims[i], dims[i + 1], dtype=dtype) for i, k in enumerate(keys)}
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act=silu, final_act: bool = False) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = linear(p[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,5 @@
+"""RecSys substrate: embedding tables, bags, and feature interactions."""
+
+from repro.recsys.embedding import embedding_bag, field_lookup, hash_ids
+
+__all__ = ["embedding_bag", "field_lookup", "hash_ids"]

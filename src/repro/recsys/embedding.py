@@ -1,0 +1,62 @@
+"""EmbeddingBag & friends — JAX has neither nn.EmbeddingBag nor CSR sparse,
+so (per the assignment) the lookup layer IS part of the system:
+
+  * `field_lookup`   — one id per field: jnp.take over a row-sharded table,
+  * `embedding_bag`  — multi-hot bags: take + jax.ops.segment_sum (sum/mean),
+  * `hash_ids`       — multiplicative hashing into per-field buckets, so any
+                       raw id stream maps onto the fixed-size tables.
+
+The big table carries the `model`-axis sharding (COIN's adjacency-slice
+analogue — DESIGN.md §4): lookups over a row-sharded table lower to
+all-to-all-style collectives exactly like the CE-partitioned aggregation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag", "field_lookup", "hash_ids"]
+
+_HASH_MULT = jnp.uint32(2654435761)  # Knuth multiplicative
+
+
+def hash_ids(raw_ids: jnp.ndarray, bucket_size: int, field_salt: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """Hash arbitrary int ids into [0, bucket_size) (quotient-free hashing)."""
+    x = raw_ids.astype(jnp.uint32) + jnp.asarray(field_salt, jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x = x * _HASH_MULT
+    x = x ^ (x >> 16)
+    return (x % jnp.uint32(bucket_size)).astype(jnp.int32)
+
+
+def field_lookup(table: jnp.ndarray, ids: jnp.ndarray, field_offsets: jnp.ndarray) -> jnp.ndarray:
+    """ids: (B, F) per-field local ids → (B, F, D) embeddings.
+
+    field_offsets: (F,) starting row of each field's sub-table inside the
+    single concatenated table (one big table → one sharding spec).
+    """
+    flat = (ids + field_offsets[None, :]).reshape(-1)
+    emb = jnp.take(table, flat, axis=0)
+    return emb.reshape(ids.shape[0], ids.shape[1], table.shape[1])
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,            # (nnz,) row ids
+    segment_ids: jnp.ndarray,    # (nnz,) output bag per id
+    num_bags: int,
+    weights: jnp.ndarray | None = None,
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag equivalent: ragged gather + segment reduce."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(ids, dtype=rows.dtype), segment_ids, num_segments=num_bags
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    elif mode != "sum":
+        raise ValueError(mode)
+    return out

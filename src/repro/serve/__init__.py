@@ -1,0 +1,5 @@
+"""Serving substrate: continuous-batching scheduler over the KV cache."""
+
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

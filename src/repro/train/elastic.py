@@ -1,0 +1,72 @@
+"""Elastic scaling: re-mesh and re-shard after node loss (DESIGN.md §3).
+
+The contract at pod scale: a failed host removes a slice of devices; the
+controller (a) picks the largest still-healthy mesh from the preference
+ladder, (b) restores the latest checkpoint with shardings rebuilt for the
+new mesh (checkpoints are mesh-agnostic host arrays — train/checkpoint.py),
+(c) rescales the data pipeline to the new data-parallel width. Everything
+here is pure logic over device lists, so it is fully unit-testable on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["MeshPlan", "elastic_replan", "reshard_tree", "scale_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+    def build(self, devices: Sequence[Any] | None = None):
+        if devices is None:
+            return jax.make_mesh(self.shape, self.axes)
+        arr = np.asarray(devices[: self.n_devices]).reshape(self.shape)
+        return jax.sharding.Mesh(arr, self.axes)
+
+
+def elastic_replan(
+    n_healthy: int,
+    model_shards: int,
+    axes: tuple[str, ...] = ("data", "model"),
+) -> MeshPlan:
+    """Largest mesh ≤ n_healthy that preserves the model-parallel degree.
+
+    Model-parallel shards hold partitioned state (the COIN CE partition —
+    can't shrink without re-partitioning), so the data axis absorbs the
+    loss: data' = floor(n_healthy / model_shards). If fewer than one data
+    replica remains, fall back to halving model shards (re-partition event).
+    """
+    if n_healthy < 1:
+        raise ValueError("no healthy devices")
+    m = model_shards
+    while m > 1 and n_healthy < m:
+        m //= 2
+    d = max(n_healthy // m, 1)
+    return MeshPlan(shape=(d, m), axes=axes)
+
+
+def reshard_tree(tree: Any, mesh, spec_tree: Any) -> Any:
+    """device_put every leaf with NamedShardings over the (new) mesh."""
+    def put(leaf, spec):
+        return jax.device_put(leaf, jax.sharding.NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        put, tree, spec_tree, is_leaf=lambda x: x is None or hasattr(x, "shape")
+    )
+
+
+def scale_batch(global_batch: int, old_data_shards: int, new_data_shards: int) -> int:
+    """Keep per-device batch constant across a re-shard (linear-scaling rule:
+    the caller rescales LR by new/old)."""
+    per_device = max(global_batch // old_data_shards, 1)
+    return per_device * new_data_shards

@@ -1,0 +1,115 @@
+"""Optimizers from scratch (no optax): SGD(+momentum), Adam, AdamW, LAMB.
+
+Functional interface:
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+All state is a pytree mirroring params (+ a scalar step), so it checkpoints
+and re-shards exactly like the params themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "lamb"]
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree], tuple[Tree, Tree]]
+    name: str = "opt"
+
+
+def _zeros_like_tree(params: Tree) -> Tree:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": _zeros_like_tree(params) if momentum else None, "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if momentum:
+            mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+            eff = (
+                jax.tree_util.tree_map(lambda m, g: momentum * m + g, mu, grads)
+                if nesterov
+                else mu
+            )
+            new_params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, eff)
+            return new_params, {"mu": mu, "step": step}
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new_params, {"mu": None, "step": step}
+
+    return Optimizer(init, update, "sgd")
+
+
+def _adam_core(grads, state, b1, b2, eps):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    t = step.astype(jnp.float32)
+    c1, c2 = 1 - b1**t, 1 - b2**t
+    upd = jax.tree_util.tree_map(
+        lambda mm, vv: (mm / c1) / (jnp.sqrt(vv / c2) + eps), m, v
+    )
+    return upd, {"m": m, "v": v, "step": step}
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_tree(params), "v": _zeros_like_tree(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        upd, new_state = _adam_core(grads, state, b1, b2, eps)
+        new_params = jax.tree_util.tree_map(lambda p, u: p - lr * u, params, upd)
+        return new_params, new_state
+
+    return Optimizer(init, update, "adam")
+
+
+def adamw(
+    lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, new_state = _adam_core(grads, state, b1, b2, eps)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: p - lr * (u + weight_decay * p), params, upd
+        )
+        return new_params, new_state
+
+    return Optimizer(base.init, update, "adamw")
+
+
+def lamb(
+    lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    """Layer-wise adaptive moments (large-batch training at pod scale)."""
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, new_state = _adam_core(grads, state, b1, b2, eps)
+
+        def apply(p, u):
+            u = u + weight_decay * p
+            pn = jnp.linalg.norm(p.reshape(-1))
+            un = jnp.linalg.norm(u.reshape(-1))
+            trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+            return p - lr * trust * u
+
+        return jax.tree_util.tree_map(apply, params, upd), new_state
+
+    return Optimizer(base.init, update, "lamb")

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device (the dry-run sets its own 512-device flag in a fresh process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_rotation(rng) -> np.ndarray:
+    a = np.linalg.qr(rng.standard_normal((3, 3)))[0]
+    if np.linalg.det(a) < 0:
+        a[:, 0] *= -1
+    return a.astype(np.float32)

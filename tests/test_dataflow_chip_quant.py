@@ -1,0 +1,92 @@
+"""Dataflow reordering (§IV-C3), chip capacity (§V-C), quantization (§V-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chip import ChipModel, chips_required
+from repro.core.dataflow import choose_order, dense_multiply_count, sparse_multiply_count
+from repro.core.quant import QuantConfig, fake_quant
+
+
+def test_nell_311x_reduction():
+    """§IV-C3 verbatim: 2.3e13 vs 7.4e10 multiplies, ≈311× reduction."""
+    c = dense_multiply_count(65755, 5414, 16)
+    assert np.isclose(c.aggregation_first, 2.3e13, rtol=0.03)
+    assert np.isclose(c.feature_first, 7.4e10, rtol=0.02)
+    assert 300 < c.reduction < 320
+    assert c.best == "feature_first"
+
+
+def test_chooser_flips_when_widths_flip():
+    assert choose_order(1000, d_in=512, d_out=16) == "feature_first"
+    assert choose_order(1000, d_in=16, d_out=512) == "aggregation_first"
+    assert choose_order(1000, 512, 16, n_edges=5000) == "feature_first"
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(10, 10_000),
+    e=st.integers(10, 100_000),
+    d_in=st.integers(1, 2048),
+    d_out=st.integers(1, 2048),
+)
+def test_chooser_optimal_under_both_cost_models(n, e, d_in, d_out):
+    dc = dense_multiply_count(n, d_in, d_out)
+    sc = sparse_multiply_count(n, e, d_in, d_out)
+    assert dc.best == min(
+        ("aggregation_first", dc.aggregation_first), ("feature_first", dc.feature_first),
+        key=lambda kv: kv[1],
+    )[0] or dc.aggregation_first == dc.feature_first
+    assert sc.reduction > 0
+
+
+def test_chip_counts_match_paper_where_derivable():
+    cm = ChipModel()
+    table = {
+        "cora": (2708, [1433, 16, 7]),
+        "citeseer": (3327, [3703, 16, 6]),
+        "pubmed": (19717, [500, 16, 3]),
+        "nell": (65755, [5414, 16, 210]),
+    }
+    # crossbar-granular reproduces Cora/Citeseer (1) and Nell (45) exactly.
+    assert chips_required(cm, *table["cora"]) == 1
+    assert chips_required(cm, *table["citeseer"]) == 1
+    assert chips_required(cm, *table["nell"]) == 45
+    # cell-granular reproduces Pubmed ≈ 3 (paper rounds 3.09 down; we ceil).
+    assert chips_required(cm, *table["pubmed"], mode="cell") in (3, 4)
+    # 30 MB chip (§IV-B3).
+    assert abs(cm.bytes_per_chip - 30 * 2**20) / (30 * 2**20) < 0.01
+
+
+def test_chips_monotone_in_nodes():
+    cm = ChipModel()
+    prev = 0
+    for n in [1000, 5000, 20_000, 60_000, 120_000]:
+        c = chips_required(cm, n, [128, 16, 4])
+        assert c >= prev
+        prev = c
+
+
+def test_fake_quant_level_count_and_ste():
+    x = jnp.linspace(-1, 1, 1001)
+    for bits in [2, 3, 4, 8]:
+        q = fake_quant(x, bits)
+        assert len(np.unique(np.asarray(q))) <= 2**bits
+    # straight-through: gradient of sum(fake_quant(x)) is all-ones
+    g = jax.grad(lambda x: fake_quant(x, 4).sum())(x)
+    assert np.allclose(np.asarray(g), 1.0)
+    # ≥32 bits is a no-op
+    assert np.array_equal(np.asarray(fake_quant(x, 32)), np.asarray(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_fake_quant_error_bound(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    q = fake_quant(x, bits)
+    amax = float(jnp.max(jnp.abs(x)))
+    step = amax / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(q - x))) <= step * 0.5 + 1e-6

@@ -1,0 +1,80 @@
+"""COIN energy model + solver: paper-exact checks and property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import CoinEnergyModel, model_from_gcn, sum_hidden_activation_bits
+from repro.core.solver import SQUARE_MESHES, interior_point_minimize, mesh_sweep, optimal_ce_count
+
+
+def test_activation_bits_paper_gcn():
+    # 2-layer GCN [F, 16, C] at 4 bits → Σ a(l+1) = 64 bits, independent of F/C.
+    assert sum_hidden_activation_bits([1433, 16, 7], 4) == 64.0
+    assert sum_hidden_activation_bits([5414, 16, 210], 4) == 64.0
+    assert sum_hidden_activation_bits([10, 7], 4) == 0.0
+
+
+def test_eq5_coefficients_match_paper():
+    """At p1=0.25, p2=0.22 the paper's Eq. 5 coefficients are 0.94, 0.06,
+    0.17, 0.19 — evaluate our analytic d² against the published form."""
+    m = CoinEnergyModel(n_nodes=6000, act_bits_sum=1.0)
+    for k in [5.0, 10.0, 20.0, 50.0, 100.0]:
+        n = 6000.0
+        paper = (
+            0.9375 * n**2.5 / k**3.5
+            - 0.055 * n**2 / k**1.5
+            - (0.165 * n**2 + 0.1875 * n**1.5) / k**2.5
+        )
+        ours = float(m.d2_total(k))
+        assert math.isclose(ours, paper, rel_tol=1e-9)
+
+
+def test_appendix_a_claim_is_violated_but_unimodal():
+    """Documented discrepancy: the literal Appendix-A claim (d²E>0 on
+    [4,100] for N>2000) fails at large k, but E is unimodal and convex
+    around the optimum, so the interior-point conclusion stands."""
+    m = model_from_gcn(6000, [1433, 16, 7], 4)
+    assert not m.is_convex(4, 100)
+    assert m.d2_total(10.0) > 0      # convex where it matters
+    assert m.convex_k_limit() > 30
+    assert m.is_unimodal()
+
+
+def test_solver_reproduces_k16_4x4():
+    m = model_from_gcn(6000, [1433, 16, 7], 4)
+    res = optimal_ce_count(m)
+    assert res.k_mesh == 16
+    assert res.mesh_shape == (4, 4)
+    assert abs(res.k_star - m.continuous_argmin()) / m.continuous_argmin() < 0.1
+    assert res.solve_ms < 1000  # paper: 10 ms; allow CPU slack
+
+
+def test_mesh_sweep_shape():
+    m = model_from_gcn(2708, [1433, 16, 7], 4)
+    sweep = mesh_sweep(m)
+    assert set(sweep) == set(SQUARE_MESHES)
+    # Fig. 9: 4x4 best for Cora-sized graphs; energy rises toward 10x10.
+    assert min(sweep, key=sweep.get) == 16
+    assert sweep[100] > sweep[16]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2000, max_value=100_000),
+    bits=st.integers(min_value=8, max_value=512),
+)
+def test_energy_positive_and_solver_not_worse_than_grid(n, bits):
+    m = CoinEnergyModel(n_nodes=n, act_bits_sum=float(bits))
+    ks = np.linspace(2, 200, 100)
+    assert np.all(m.total(ks) > 0)
+    res = optimal_ce_count(m)
+    grid_best = min(float(m.total(float(k))) for k in SQUARE_MESHES)
+    assert res.energy_at_k <= grid_best * (1 + 1e-9)
+
+
+def test_interior_point_on_quadratic():
+    k, iters, converged = interior_point_minimize(lambda k: (k - 7.3) ** 2, k_lo=1, k_hi=100)
+    assert abs(k - 7.3) < 1e-3
+    assert converged

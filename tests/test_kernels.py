@@ -1,0 +1,128 @@
+"""Per-kernel allclose vs the ref.py oracles: shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.structure import blocked_adjacency
+from repro.kernels.ops import bsr_spmm, flash_attention, fm_interaction
+from repro.kernels.ref import bsr_spmm_ref, flash_attention_ref, fm_interaction_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ bsr_spmm
+@pytest.mark.parametrize("n,e,f", [(300, 900, 64), (1000, 5000, 96), (257, 800, 128)])
+def test_bsr_spmm_matches_ref(n, e, f):
+    ei = RNG.integers(0, n, size=(2, e)).astype(np.int32)
+    w = RNG.standard_normal(e).astype(np.float32)
+    ba = blocked_adjacency(n, ei, w, block=128)
+    z = jnp.asarray(RNG.standard_normal((ba.n_padded, f)), jnp.float32)
+    out = bsr_spmm(jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols), z)
+    ref = bsr_spmm_ref(jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols), z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_bsr_spmm_equals_segment_sum():
+    """The kernel computes the same aggregation as the segment-op reference
+    path used by the models — ties the Pallas layer to the system layer."""
+    from repro.graph.ops import aggregate
+
+    n, e, f = 500, 2500, 64
+    ei = RNG.integers(0, n, size=(2, e)).astype(np.int32)
+    w = RNG.standard_normal(e).astype(np.float32)
+    ba = blocked_adjacency(n, ei, w, block=128)
+    z = jnp.asarray(RNG.standard_normal((ba.n_padded, f)), jnp.float32)
+    out = bsr_spmm(jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols), z)[:n]
+    seg = aggregate(z[:n], jnp.asarray(ei[0]), jnp.asarray(ei[1]), n, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(seg), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    t=st.integers(1, 5),
+    f=st.sampled_from([128, 256]),
+    seed=st.integers(0, 99),
+)
+def test_bsr_spmm_hypothesis_blocks(nb, t, f, seed):
+    """Random block structures (including repeated columns = padding)."""
+    r = np.random.default_rng(seed)
+    B = 128
+    vals = r.standard_normal((nb, t, B, B)).astype(np.float32) * 0.1
+    cols = r.integers(0, nb, size=(nb, t)).astype(np.int32)
+    z = jnp.asarray(r.standard_normal((nb * B, f)), jnp.float32)
+    out = bsr_spmm(jnp.asarray(vals), jnp.asarray(cols), z, f_tile=128)
+    ref = bsr_spmm_ref(jnp.asarray(vals), jnp.asarray(cols), z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ fm_interaction
+@pytest.mark.parametrize("b,f,d", [(32, 13, 10), (256, 39, 10), (64, 8, 16)])
+def test_fm_matches_ref_and_pairwise(b, f, d):
+    emb = jnp.asarray(RNG.standard_normal((b, f, d)), jnp.float32)
+    out = fm_interaction(emb)
+    ref = fm_interaction_ref(emb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+    # explicit O(F²) pairwise oracle
+    pair = 0.5 * (
+        jnp.einsum("bfd,bgd->b", emb, emb) - jnp.einsum("bfd,bfd->b", emb, emb)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pair), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([8, 64, 200]),
+    f=st.integers(2, 40),
+    d=st.sampled_from([4, 10, 32]),
+    seed=st.integers(0, 99),
+)
+def test_fm_hypothesis(b, f, d, seed):
+    r = np.random.default_rng(seed)
+    emb = jnp.asarray(r.standard_normal((b, f, d)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(fm_interaction(emb)), np.asarray(fm_interaction_ref(emb)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+# ----------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("s,d,window", [(128, 64, None), (256, 64, 48), (128, 128, 16)])
+def test_flash_matches_ref(s, d, window):
+    q = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    out = flash_attention(q, k, v, window=window, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    s, d = 128, 64
+    q = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.bfloat16)
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_flash_matches_model_attention():
+    """Kernel == the chunked-jnp attention the models actually run on CPU."""
+    from repro.nn.attention import _chunked_attention
+
+    s, d = 128, 64
+    q = jnp.asarray(RNG.standard_normal((2, s, 4, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, s, 4, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, s, 4, d)), jnp.float32)
+    model_out = _chunked_attention(q, k, v, jnp.arange(s), 32, chunk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(8, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(8, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(8, s, d)
+    kern = flash_attention(qf, kf, vf, window=32, bq=64, bk=64)
+    kern = kern.reshape(2, 4, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(model_out), rtol=3e-5, atol=3e-5)

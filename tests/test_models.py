@@ -1,0 +1,186 @@
+"""Model-level behaviour: decode consistency, equivariance, dataflow identity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from tests.conftest import random_rotation
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------------ LM
+@pytest.mark.parametrize("variant", ["dense", "moe", "slide"])
+def test_lm_decode_matches_forward(variant):
+    from repro.models.transformer_lm import (
+        LMConfig, lm_decode_step, lm_forward, lm_init, lm_init_cache,
+    )
+
+    cfg = {
+        "dense": LMConfig("d", 3, 32, 4, 2, 64, 101),
+        "moe": LMConfig("m", 2, 32, 4, 4, 48, 67, moe_experts=4, moe_top_k=2),
+        "slide": LMConfig("s", 6, 32, 4, 2, 64, 53, window=8, global_every=6),
+    }[variant]
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    cache = lm_init_cache(cfg, 2, 16)
+    outs = []
+    for t in range(12):
+        lg, cache = lm_decode_step(p, cache, toks[:, t], jnp.asarray(t, jnp.int32), cfg)
+        outs.append(lg)
+    pre, _ = lm_forward(p, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)), np.asarray(pre), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_lm_window_pattern_gemma3():
+    from repro.configs import get_arch
+
+    cfg = get_arch("gemma3-12b").make_config(None)
+    ws = cfg.window_sizes()
+    assert len(ws) == 48
+    glob = np.flatnonzero(ws > 10_000)
+    assert list(glob) == [5, 11, 17, 23, 29, 35, 41, 47]  # every 6th layer
+    assert np.all(ws[ws < 10_000] == 1024)
+
+
+def test_lm_loss_decreases():
+    from repro.models.transformer_lm import LMConfig, lm_init, lm_loss
+    from repro.train.optimizer import adam
+
+    cfg = LMConfig("t", 2, 32, 4, 2, 64, 64)
+    params = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (4, 24), 0, cfg.vocab)
+    opt = adam(5e-3)
+    state = opt.init(params)
+    first = float(lm_loss(params, toks, cfg))
+    step = jax.jit(
+        lambda p, s: (lambda l, g: opt.update(g, s, p) + (l,))(*jax.value_and_grad(lm_loss)(p, toks, cfg))
+    )
+    for _ in range(30):
+        params, state, loss = step(params, state)
+    assert float(loss) < first * 0.8
+
+
+# ----------------------------------------------------------------------- GCN
+def test_gcn_dataflow_orders_agree():
+    """(A·X)·W == A·(X·W): both dataflows give identical outputs (fp tolerance).
+    The paper's reordering changes WORK, not semantics."""
+    from repro.models.gcn import GCNConfig, gcn_forward, gcn_init
+
+    r = np.random.default_rng(0)
+    n, e = 120, 600
+    s = jnp.asarray(r.integers(0, n, e)); d = jnp.asarray(r.integers(0, n, e))
+    w = jnp.asarray(r.standard_normal(e), jnp.float32)
+    x = jnp.asarray(r.standard_normal((n, 48)), jnp.float32)
+    base = GCNConfig(layer_dims=(48, 16, 4))
+    p = gcn_init(KEY, base)
+    out_f = gcn_forward(p, x, s, d, w, dataclasses.replace(base, dataflow="feature_first"))
+    out_a = gcn_forward(p, x, s, d, w, dataclasses.replace(base, dataflow="aggregation_first"))
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_a), rtol=2e-3, atol=2e-3)
+
+
+def test_gcn_bsr_backend_matches_segment():
+    from repro.graph.structure import blocked_adjacency
+    from repro.models.gcn import GCNConfig, gcn_forward, gcn_init
+
+    r = np.random.default_rng(1)
+    n, e = 300, 1500
+    ei = r.integers(0, n, size=(2, e)).astype(np.int32)
+    w = np.abs(r.standard_normal(e)).astype(np.float32)
+    ba = blocked_adjacency(n, ei, w, block=128)
+    x = jnp.asarray(r.standard_normal((n, 32)), jnp.float32)
+    cfg_seg = GCNConfig(layer_dims=(32, 16, 4), backend="segment")
+    cfg_bsr = GCNConfig(layer_dims=(32, 16, 4), backend="bsr")
+    p = gcn_init(KEY, cfg_seg)
+    s, d = jnp.asarray(ei[0]), jnp.asarray(ei[1])
+    wj = jnp.asarray(w)
+    out_seg = gcn_forward(p, x, s, d, wj, cfg_seg)
+    xp = jnp.pad(x, ((0, ba.n_padded - n), (0, 0)))
+    out_bsr = gcn_forward(
+        p, xp, s, d, wj, cfg_bsr,
+        adjacency=(jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols)),
+    )[:n]
+    np.testing.assert_allclose(np.asarray(out_bsr), np.asarray(out_seg), rtol=3e-4, atol=3e-4)
+
+
+def test_gcn_quantized_forward_close_to_fp32():
+    from repro.core.quant import QuantConfig
+    from repro.models.gcn import GCNConfig, gcn_forward, gcn_init
+
+    r = np.random.default_rng(2)
+    n, e = 100, 500
+    s = jnp.asarray(r.integers(0, n, e)); d = jnp.asarray(r.integers(0, n, e))
+    w = jnp.asarray(np.abs(r.standard_normal(e)), jnp.float32)
+    x = jnp.asarray(r.standard_normal((n, 24)), jnp.float32)
+    fp = GCNConfig(layer_dims=(24, 16, 4))
+    q8 = GCNConfig(layer_dims=(24, 16, 4), quant=QuantConfig(8, 8, enabled=True))
+    p = gcn_init(KEY, fp)
+    o1, o2 = gcn_forward(p, x, s, d, w, fp), gcn_forward(p, x, s, d, w, q8)
+    rel = float(jnp.linalg.norm(o1 - o2) / jnp.linalg.norm(o1))
+    assert rel < 0.1
+
+
+# --------------------------------------------------------------- equivariance
+def test_egnn_se3_equivariance(rng):
+    from repro.models.egnn import EGNNConfig, egnn_forward, egnn_init
+
+    cfg = EGNNConfig(n_layers=2, d_hidden=16, d_in=8, d_out=2)
+    p = egnn_init(KEY, cfg)
+    n, e = 40, 150
+    s = jnp.asarray(rng.integers(0, n, e)); d = jnp.asarray(rng.integers(0, n, e))
+    h = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    pos = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    R = jnp.asarray(random_rotation(rng)); t = jnp.asarray([0.5, -1.0, 2.0])
+    h1, x1 = egnn_forward(p, h, pos, s, d, cfg)
+    h2, x2 = egnn_forward(p, h, pos @ R.T + t, s, d, cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(x1 @ R.T + t), np.asarray(x2), atol=2e-4)
+
+
+def test_equiformer_so3_invariance_and_chunking(rng):
+    from repro.models.equiformer_v2 import (
+        EquiformerV2Config, equiformer_forward, equiformer_init,
+    )
+
+    cfg = EquiformerV2Config(n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=4, d_in=8, d_out=2)
+    p = equiformer_init(KEY, cfg)
+    n, e = 40, 150
+    s = jnp.asarray(rng.integers(0, n, e)); d = jnp.asarray(rng.integers(0, n, e))
+    h = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    pos = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    R = jnp.asarray(random_rotation(rng)); t = jnp.asarray([1.0, 2.0, 3.0])
+    o1 = equiformer_forward(p, h, pos, s, d, cfg)
+    o2 = equiformer_forward(p, h, pos @ R.T + t, s, d, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+    cfg_c = dataclasses.replace(cfg, edge_chunk=64)
+    o3 = equiformer_forward(p, h, pos, s, d, cfg_c)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_so3_wigner_properties(seed):
+    from repro.nn.so3 import real_sh_rotations
+
+    r = np.random.default_rng(seed)
+    a = np.linalg.qr(r.standard_normal((2, 3, 3)))[0]
+    det = np.linalg.det(a)
+    a[det < 0, :, 0] *= -1
+    R = jnp.asarray(a, jnp.float32)
+    D = real_sh_rotations(R, 4)
+    for l, Dl in enumerate(D):
+        eye = np.eye(2 * l + 1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.einsum("bij,bkj->bik", Dl, Dl)), np.tile(eye, (2, 1, 1)), atol=2e-5
+        )
+    D1, D2 = real_sh_rotations(R[:1], 4), real_sh_rotations(R[1:], 4)
+    D12 = real_sh_rotations(R[:1] @ R[1:], 4)
+    for l in range(5):
+        np.testing.assert_allclose(
+            np.asarray(D12[l]), np.asarray(D1[l] @ D2[l]), atol=3e-5
+        )

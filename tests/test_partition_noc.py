@@ -1,0 +1,109 @@
+"""Partitioner + NoC model: invariants and cross-checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc import CMeshNoC, MeshNoC, baseline_broadcast_summary
+from repro.core.partition import measured_probabilities, partition_graph, refine_partition
+from repro.graph.generators import citation_like, random_graph
+
+
+def _graph(n=500, e=3000, seed=0):
+    g = citation_like(n, e, seed=seed)
+    return g.n_nodes, g.edge_index
+
+
+@pytest.mark.parametrize("method", ["block", "random", "bfs"])
+def test_partition_invariants(method):
+    n, ei = _graph()
+    p = partition_graph(n, ei, 8, method=method, seed=1)
+    assert p.part_sizes.sum() == n
+    assert p.edge_counts.sum() == ei.shape[1]
+    assert p.intra_edges + p.cut_edges == ei.shape[1]
+    p1, p2 = measured_probabilities(p)
+    assert np.all(p1 >= 0) and np.all(p1 <= 1)
+    assert np.all(p2 >= 0) and np.all(p2 <= 1)
+    assert np.allclose(np.diag(p2), 0)
+    if method == "bfs":
+        # BFS growth enforces the cap per level (a whole frontier can land
+        # in one part before sizes refresh), so allow one frontier of slack.
+        assert p.part_sizes.max() <= int(np.ceil(n / 8) * 1.25)
+
+
+def test_refinement_reduces_cut_on_homophilous_graph():
+    n, ei = _graph(800, 6000, seed=3)
+    base = partition_graph(n, ei, 8, method="random", seed=0)
+    refined_asg = refine_partition(base.assignment, 8, ei[0], ei[1], passes=3)
+    refined = partition_graph(n, ei, 8, method="random", seed=0)
+    refined.assignment[:] = refined_asg
+    from repro.core.partition import _edge_count_matrix
+
+    counts = _edge_count_matrix(refined_asg, 8, ei[0].astype(np.int64), ei[1].astype(np.int64))
+    cut_after = counts.sum() - np.trace(counts)
+    assert cut_after <= base.cut_edges
+
+
+def test_noc_energy_linear_and_hops_exact():
+    noc = MeshNoC(4, 4)
+    t = np.zeros((16, 16))
+    t[0, 15] = 1000.0  # corner to corner: 3+3 = 6 hops
+    e1, hop_bits = noc.energy_for_traffic(t)
+    assert hop_bits == 6000.0
+    e2, _ = noc.energy_for_traffic(2 * t)
+    assert np.isclose(e2, 2 * e1)
+
+
+def test_link_load_conservation():
+    """Σ link loads == Σ bits × hops under X-Y routing."""
+    rng = np.random.default_rng(0)
+    noc = MeshNoC(3, 5)
+    t = rng.random((15, 15)) * 100
+    np.fill_diagonal(t, 0)
+    h, v = noc.link_loads(t)
+    _, hop_bits = noc.energy_for_traffic(t)
+    assert np.isclose(h.sum() + v.sum(), hop_bits, rtol=1e-9)
+
+
+def test_baseline_closed_form_matches_matrix():
+    """Uniform broadcast: closed form == explicit matrix model (small k)."""
+    noc = MeshNoC(4, 4)
+    n = 16
+    bits = 64.0
+    t = np.full((n, n), bits)
+    np.fill_diagonal(t, 0)
+    e_matrix, hop_matrix = noc.energy_for_traffic(t)
+    s = baseline_broadcast_summary(noc, n, bits)
+    assert np.isclose(s.hop_bits, hop_matrix, rtol=1e-12)
+    assert np.isclose(s.energy_j, e_matrix, rtol=1e-12)
+
+
+def test_cmesh_lower_latency_higher_energy():
+    mesh, cmesh = MeshNoC(4, 4), CMeshNoC(4, 4)
+    rng = np.random.default_rng(1)
+    t = rng.random((16, 16)) * 1e6
+    np.fill_diagonal(t, 0)
+    sm, sc = mesh.summarize(t), cmesh.summarize(t)
+    assert sc.energy_j > sm.energy_j          # Fig. 12: c-mesh costs energy
+    assert sc.hop_bits < sm.hop_bits          # …because express links cut hops
+
+
+def test_broadcast_vs_halo_traffic():
+    """The beyond-paper halo exchange ships no more than the broadcast."""
+    n, ei = _graph(600, 4000, seed=2)
+    p = partition_graph(n, ei, 8, method="bfs", seed=0, refine=True)
+    b = p.inter_ce_traffic_bits(64, broadcast=True).sum()
+    h = p.inter_ce_traffic_bits(64, broadcast=False).sum()
+    assert h <= b
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(2, 6), cols=st.integers(2, 6), seed=st.integers(0, 100))
+def test_latency_monotone_in_traffic(rows, cols, seed):
+    noc = MeshNoC(rows, cols)
+    k = rows * cols
+    rng = np.random.default_rng(seed)
+    t = rng.random((k, k)) * 1e4
+    np.fill_diagonal(t, 0)
+    l1 = noc.latency_for_traffic(t)
+    l2 = noc.latency_for_traffic(3 * t)
+    assert l2 >= l1

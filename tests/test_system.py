@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the COIN system (deliverable c)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_coin_pipeline_end_to_end():
+    """Graph → partition → traffic → NoC energy → optimal-k: the whole COIN
+    methodology on a Cora-stats synthetic graph."""
+    from repro.core.energy import CoinEnergyModel
+    from repro.core.noc import MeshNoC, gcn_layer_traffic
+    from repro.core.partition import measured_probabilities, partition_graph
+    from repro.core.solver import optimal_ce_count
+    from repro.graph.generators import citation_like
+
+    g = citation_like(2708, 10556, seed=0)
+    part = partition_graph(g.n_nodes, g.edge_index, 16, method="bfs", seed=0, refine=True)
+    p1, p2 = measured_probabilities(part)
+    model = CoinEnergyModel(
+        n_nodes=g.n_nodes, act_bits_sum=64.0,
+        p_intra=float(p1.mean()), p_inter=float(p2.mean() * 16 / 15),
+    )
+    res = optimal_ce_count(model)
+    # With MEASURED probabilities the optimum sits near but above the paper's
+    # uniform-p 4×4 (higher measured p_intra favors more CEs — EXPERIMENTS.md).
+    assert res.k_mesh in (9, 16, 25, 36)
+    noc = MeshNoC(4, 4)
+    traces = gcn_layer_traffic(part, [64.0])
+    summary = noc.summarize(traces[0])
+    assert summary.energy_j > 0 and summary.latency_s > 0
+    # Halo (beyond-paper) never ships more than broadcast (paper-faithful).
+    halo = noc.summarize(part.inter_ce_traffic_bits(64.0, broadcast=False))
+    assert halo.total_bits <= summary.total_bits
+
+
+def test_gcn_trains_to_better_than_chance():
+    """Train the paper's GCN (reduced Cora) — accuracy must beat chance by 2×."""
+    from repro.graph.generators import make_dataset
+    from repro.graph.structure import to_padded
+    from repro.models.gcn import GCNConfig, gcn_forward, gcn_loss, gcn_init
+    from repro.train.optimizer import adam
+
+    spec, g = make_dataset("cora", reduced=True)
+    gs = g.symmetrized().with_self_loops()
+    pg = to_padded(gs, weights=gs.sym_normalized_weights())
+    cfg = GCNConfig(layer_dims=(spec.n_features, 16, spec.n_labels))
+    params = gcn_init(jax.random.PRNGKey(0), cfg)
+    feats = jnp.asarray(g.features)
+    labels = jnp.asarray(g.labels)
+    mask = jnp.ones(spec.n_nodes)
+    opt = adam(1e-2)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(gcn_loss)(
+            params, feats, pg.senders, pg.receivers, pg.edge_weight, labels, mask, cfg
+        )
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    for _ in range(60):
+        params, state, loss = step(params, state)
+    logits = gcn_forward(params, feats, pg.senders, pg.receivers, pg.edge_weight, cfg)
+    acc = float((jnp.argmax(logits, -1) == labels).mean())
+    assert acc > 2.0 / spec.n_labels, acc
+
+
+@pytest.mark.slow
+def test_dryrun_cell_smoke_subprocess():
+    """One real dry-run cell on 64 virtual devices in a fresh process
+    (device count must be set before jax init, so not in-process)."""
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=64';\n"
+        "import sys; sys.path.insert(0, %r)\n"
+        "import jax\n"
+        "from repro.configs import get_arch\n"
+        "from repro.launch.steps import build_cell\n"
+        "mesh = jax.make_mesh((4, 16), ('data', 'model'))\n"
+        "spec = get_arch('pna')\n"
+        "cell = build_cell(spec, spec.shapes['full_graph_sm'], mesh)\n"
+        "compiled = cell.lower(mesh).compile()\n"
+        "assert (compiled.cost_analysis() or {}).get('flops', 0) > 0\n"
+        "print('SMOKE_OK')\n"
+    ) % os.path.abspath(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=300
+    )
+    assert "SMOKE_OK" in out.stdout, out.stderr[-1500:]
+
+
+@pytest.mark.slow
+def test_compressed_psum_subprocess():
+    """int8 reduce-scatter/all-gather mean == exact mean within quant error,
+    run under shard_map on 8 virtual devices."""
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8';\n"
+        "import sys; sys.path.insert(0, %r)\n"
+        "import jax, jax.numpy as jnp, numpy as np\n"
+        "from jax.sharding import PartitionSpec as P\n"
+        "from repro.train.compression import compressed_psum_mean\n"
+        "mesh = jax.make_mesh((8,), ('data',))\n"
+        "x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 128)), jnp.float32)\n"
+        "f = jax.shard_map(lambda s: compressed_psum_mean(s[0], 'data'),\n"
+        "                  mesh=mesh, in_specs=P('data', None), out_specs=P(),\n"
+        "                  check_vma=False)\n"
+        "approx = f(x)\n"
+        "exact = x.mean(0)\n"
+        "err = float(jnp.abs(approx - exact).max())\n"
+        "assert err < 0.1, err\n"
+        "print('PSUM_OK', err)\n"
+    ) % os.path.abspath(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=300
+    )
+    assert "PSUM_OK" in out.stdout, out.stderr[-1500:]
+
+
+def test_dryrun_results_complete_if_present():
+    """If the sweep has been run, every assigned cell must be OK or a
+    documented SKIP (the multi-pod dry-run contract)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+    if not os.path.exists(path):
+        pytest.skip("dry-run sweep not yet executed")
+    recs = json.load(open(path))
+    singles = [r for r in recs if r["mesh"] == "16x16"]
+    assert len(singles) >= 40
+    bad = [r for r in singles if r["status"] == "FAIL"]
+    assert not bad, [(r["arch"], r["shape"], r.get("error")) for r in bad]
