@@ -1,0 +1,30 @@
+"""repro.dist — the communication layer (DESIGN.md §7).
+
+COIN's central claim is that minimizing inter-CE communication — exchanging
+only boundary ("halo") vertices between partitions instead of broadcasting
+full layer outputs (paper Fig. 5c, §IV-C) — is what buys the energy win.
+This package makes that contract executable on a JAX mesh:
+
+  policy — :class:`ShardingPolicy`, the name→PartitionSpec map every model
+           threads through its forward pass (``policy.constrain(x, name)``),
+           with the :data:`NO_POLICY` no-op singleton for unsharded runs.
+  halo   — :class:`HaloPlan` / :func:`build_halo_plan`: host-side relocation
+           of a partitioned graph into contiguous per-device blocks plus the
+           padded send/edge tables, and the :func:`halo_exchange` /
+           :func:`halo_aggregate` collectives (all_gather / ppermute inside
+           shard_map) that ship only ``k·s_max`` halo rows per device instead
+           of the ``(k−1)·n_local`` rows of the broadcast schedule.
+"""
+from repro.dist.compat import ensure_shard_map
+from repro.dist.halo import HaloPlan, build_halo_plan, halo_aggregate, halo_exchange
+from repro.dist.policy import NO_POLICY, ShardingPolicy
+
+__all__ = [
+    "ShardingPolicy",
+    "NO_POLICY",
+    "HaloPlan",
+    "build_halo_plan",
+    "halo_exchange",
+    "halo_aggregate",
+    "ensure_shard_map",
+]

@@ -1,0 +1,81 @@
+"""jax version compatibility shims (DESIGN.md §7.4).
+
+The codebase targets the modern jax API surface:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+    — older jaxlib builds (≤ 0.4.x, the pinned CPU toolchain in CI) only ship
+    ``jax.experimental.shard_map.shard_map`` whose replication-check kwarg is
+    spelled ``check_rep``; ``ensure_shard_map`` installs a forwarding wrapper
+    as ``jax.shard_map`` exactly once.
+  * ``Compiled.cost_analysis() -> dict`` — older jaxlib returns a one-element
+    LIST of cost dicts; ``ensure_cost_analysis_dict`` normalizes the return
+    to the dict the modern API produces (the dry-run/hillclimb/tests all do
+    ``(compiled.cost_analysis() or {}).get(...)``).
+
+Importing any ``repro`` module applies both shims (``repro/__init__.py``), so
+call sites use one spelling everywhere. Neither touches jax device state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["ensure_shard_map", "ensure_cost_analysis_dict"]
+
+
+def ensure_shard_map():
+    """Return a ``shard_map`` callable accepting the modern kwargs.
+
+    Installs it as ``jax.shard_map`` when the running jax predates it; a
+    native ``jax.shard_map`` is returned untouched.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native
+
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    @functools.wraps(_legacy)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, auto=frozenset()):
+        check = True
+        if check_rep is not None:
+            check = check_rep
+        if check_vma is not None:        # modern spelling wins if both given
+            check = check_vma
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=check, auto=auto)
+
+    jax.shard_map = shard_map
+    return shard_map
+
+
+def ensure_cost_analysis_dict() -> None:
+    """Normalize ``jax.stages.Compiled.cost_analysis`` to return a dict.
+
+    jaxlib ≤ 0.4.x returns ``[{...}]`` (one entry per program); the modern
+    API returns the dict itself. Unwraps the singleton list, once.
+    """
+    cls = jax.stages.Compiled
+    if getattr(cls.cost_analysis, "_repro_dict_shim", False):
+        return
+
+    legacy = cls.cost_analysis
+
+    @functools.wraps(legacy)
+    def cost_analysis(self):
+        out = legacy(self)
+        if isinstance(out, list):
+            if not out:
+                return None
+            if len(out) == 1 and isinstance(out[0], dict):
+                return out[0]
+        return out
+
+    cost_analysis._repro_dict_shim = True
+    cls.cost_analysis = cost_analysis
+
+
+ensure_shard_map()
+ensure_cost_analysis_dict()

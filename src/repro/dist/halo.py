@@ -1,0 +1,244 @@
+"""Halo-exchange plan + collectives (DESIGN.md §7.2–7.3).
+
+COIN's broadcast schedule (paper Fig. 5c) ships each CE's FULL layer output
+to every other CE: ``(k−1)·n_local`` rows received per device per layer. The
+halo schedule ships only boundary vertices — the distinct sources of cut
+edges — so each device receives at most ``k·s_max`` rows, where ``s_max`` is
+the largest per-device export set. The paper's communication tradeoff is the
+executable invariant
+
+    k · s_max  <  (k − 1) · n_local        (halo beats broadcast)
+
+checked by ``tests/test_halo_dist.py`` on the 2000-node/8-partition case.
+
+``build_halo_plan`` is the one-time host-side (numpy) relocation:
+
+  1. permute nodes into contiguous per-device blocks (``perm``), one block
+     per CE of the :class:`~repro.core.partition.Partition`,
+  2. pad every block to ``n_local`` rows and every export set to ``s_max``
+     entries so all devices run the same static shapes,
+  3. re-localize edges: every edge lives on its RECEIVER's device; receivers
+     become local row ids and senders index the concatenation
+     ``[local block ‖ halo block]`` where halo slot ``j·s_max + t`` holds
+     row ``send_idx[j, t]`` exported by device ``j``.
+
+``halo_exchange`` / ``halo_aggregate`` are the matching device-side
+collectives, written against a 1-D mesh axis inside ``shard_map`` (all
+shapes static, so they lower to a single all_gather — or a ppermute ring —
+of the (s_max, d) export block).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.compat import ensure_shard_map
+from repro.graph.ops import aggregate
+
+ensure_shard_map()
+
+__all__ = ["HaloPlan", "build_halo_plan", "halo_exchange", "halo_aggregate"]
+
+
+@dataclasses.dataclass
+class HaloPlan:
+    """Static-shape relocation of a partitioned graph onto k devices.
+
+    Array layout (leading axis k = one slice per device):
+
+      perm        (n_nodes,) int64   — new position → original node id; the
+                                       first ``part_sizes[0]`` entries are
+                                       device 0's nodes, and so on.
+      send_idx    (k, s_max)  int32  — local rows each device exports (the
+                                       distinct sources of its outgoing cut
+                                       edges), padded with row 0.
+      senders_l   (k, e_local) int32 — per-edge source index into the
+                                       ``[local(n_local) ‖ halo(k·s_max)]``
+                                       concatenation.
+      receivers_l (k, e_local) int32 — per-edge local destination row.
+      edge_w      (k, e_local) f32   — edge weight; exactly 0 ⇒ padding edge
+                                       (contributes nothing to aggregates).
+    """
+
+    k: int
+    n_local: int                      # rows per device block (max part size)
+    s_max: int                        # export rows per device (padded)
+    e_local: int                      # edges per device (padded)
+    n_nodes: int
+    perm: np.ndarray
+    send_idx: np.ndarray
+    senders_l: np.ndarray
+    receivers_l: np.ndarray
+    edge_w: np.ndarray
+
+    # ---------------------------------------------------------------- wire
+    @property
+    def halo_rows_per_device(self) -> int:
+        """Rows received per device per exchange under the halo schedule."""
+        return self.k * self.s_max
+
+    @property
+    def broadcast_rows_per_device(self) -> int:
+        """Rows received per device per layer under the broadcast schedule."""
+        return (self.k - 1) * self.n_local
+
+    def wire_fraction(self) -> float:
+        """halo ÷ broadcast received-row ratio (< 1 ⇔ halo wins)."""
+        return self.halo_rows_per_device / max(self.broadcast_rows_per_device, 1)
+
+    # -------------------------------------------------------------- device
+    def device_arrays(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(send_idx, senders_l, receivers_l, edge_w) as device arrays, each
+        with the leading k axis to be sharded one-slice-per-device."""
+        return (
+            jnp.asarray(self.send_idx, jnp.int32),
+            jnp.asarray(self.senders_l, jnp.int32),
+            jnp.asarray(self.receivers_l, jnp.int32),
+            jnp.asarray(self.edge_w, jnp.float32),
+        )
+
+    def abstract_inputs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
+        """ShapeDtypeStructs mirroring :meth:`device_arrays` (dry-run path)."""
+        return (
+            jax.ShapeDtypeStruct((self.k, self.s_max), jnp.int32),
+            jax.ShapeDtypeStruct((self.k, self.e_local), jnp.int32),
+            jax.ShapeDtypeStruct((self.k, self.e_local), jnp.int32),
+            jax.ShapeDtypeStruct((self.k, self.e_local), jnp.float32),
+        )
+
+
+def build_halo_plan(part, edge_index: np.ndarray, w: np.ndarray | None = None) -> HaloPlan:
+    """Relocate a :class:`~repro.core.partition.Partition` into a HaloPlan.
+
+    edge_index: (2, E) directed (src, dst); each edge is placed on its
+    destination's device. ``w`` defaults to all-ones; padding edges get
+    weight 0, so ``(edge_w > 0).sum() == E`` accounts for every real edge
+    exactly once (the seed-suite invariant).
+    """
+    assignment = np.asarray(part.assignment, dtype=np.int64)
+    k = int(part.k)
+    n = int(part.n_nodes)
+    src = np.asarray(edge_index[0], dtype=np.int64)
+    dst = np.asarray(edge_index[1], dtype=np.int64)
+    e = int(src.shape[0])
+    w = np.ones(e, np.float32) if w is None else np.asarray(w, np.float32)
+
+    # 1. contiguous per-device blocks --------------------------------------
+    perm = np.argsort(assignment, kind="stable").astype(np.int64)
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n, dtype=np.int64)
+    sizes = np.bincount(assignment, minlength=k).astype(np.int64)
+    offsets = np.zeros(k + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    n_local = int(sizes.max()) if n else 0
+    local = inv - offsets[assignment]          # local row of every node
+
+    a_s, a_d = assignment[src], assignment[dst]
+    cut = a_s != a_d
+
+    # 2. export sets: distinct (source device, source node) of cut edges ---
+    pair = a_s[cut] * n + src[cut]             # unique id per (dev, node)
+    uniq = np.unique(pair)
+    send_dev = uniq // max(n, 1)
+    send_node = uniq % max(n, 1)
+    send_counts = np.bincount(send_dev, minlength=k).astype(np.int64)
+    s_max = int(send_counts.max()) if uniq.size else 0
+    dev_start = np.zeros(k + 1, np.int64)
+    np.cumsum(send_counts, out=dev_start[1:])
+    send_idx = np.zeros((k, s_max), np.int32)
+    if uniq.size:
+        slot = np.arange(uniq.size, dtype=np.int64) - dev_start[send_dev]
+        send_idx[send_dev, slot] = local[send_node].astype(np.int32)
+
+    # 3. re-localized edges, grouped by the receiver's device --------------
+    senders_full = local[src].copy()
+    if uniq.size:
+        # np.unique output is sorted, so searchsorted recovers each cut
+        # edge's slot in its source device's export set.
+        pos = np.searchsorted(uniq, a_s[cut] * n + src[cut])
+        halo_slot = pos - dev_start[a_s[cut]]
+        senders_full[cut] = n_local + a_s[cut] * s_max + halo_slot
+    receivers_full = local[dst]
+
+    owner = a_d
+    e_counts = np.bincount(owner, minlength=k).astype(np.int64)
+    e_local = max(int(e_counts.max()) if e else 0, 1)
+    e_start = np.zeros(k + 1, np.int64)
+    np.cumsum(e_counts, out=e_start[1:])
+    senders_l = np.zeros((k, e_local), np.int32)
+    receivers_l = np.zeros((k, e_local), np.int32)
+    edge_w = np.zeros((k, e_local), np.float32)
+    if e:
+        order = np.argsort(owner, kind="stable")
+        own_o = owner[order]
+        e_slot = np.arange(e, dtype=np.int64) - e_start[own_o]
+        senders_l[own_o, e_slot] = senders_full[order].astype(np.int32)
+        receivers_l[own_o, e_slot] = receivers_full[order].astype(np.int32)
+        edge_w[own_o, e_slot] = w[order]
+
+    return HaloPlan(
+        k=k, n_local=n_local, s_max=s_max, e_local=e_local, n_nodes=n,
+        perm=perm, send_idx=send_idx, senders_l=senders_l,
+        receivers_l=receivers_l, edge_w=edge_w,
+    )
+
+
+def halo_exchange(
+    h: jnp.ndarray, send_idx: jnp.ndarray, axis_name: str, via: str = "all_gather"
+) -> jnp.ndarray:
+    """Exchange boundary rows across the named mesh axis (inside shard_map).
+
+    h        — (n_local, d) this device's block.
+    send_idx — (s_max,) local rows this device exports.
+    Returns the (k·s_max, d) halo block: slot ``j·s_max + t`` holds row
+    ``send_idx[j, t]`` of device j, for every j including self (the self
+    rows are redundant but keep the indexing uniform and the shapes static).
+
+    via="all_gather" lowers to one fused collective; via="ppermute" runs a
+    k−1 step neighbor ring (the NoC-shaped schedule COIN's mesh model
+    assumes) — identical results, different lowering.
+    """
+    export = h[send_idx]                                  # (s_max, d)
+    if export.shape[0] == 0:
+        # Nothing crosses the boundary (k = 1 or a fully-local partition);
+        # XLA rejects zero-width collectives, and (k·0, d) == (0, d) anyway.
+        return export
+    if via == "all_gather":
+        return jax.lax.all_gather(export, axis_name, axis=0, tiled=True)
+    if via != "ppermute":
+        raise ValueError(f"unknown exchange lowering: {via!r}")
+    k = jax.lax.psum(1, axis_name)                        # static axis size
+    perm = [((j + 1) % k, j) for j in range(k)]
+    blocks, cur = [export], export
+    for _ in range(k - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        blocks.append(cur)
+    # blocks[t] on device i is device (i+t) mod k's export; roll by the
+    # device index to arrange slots in absolute device order.
+    stack = jnp.stack(blocks)                             # (k, s_max, d)
+    stack = jnp.roll(stack, jax.lax.axis_index(axis_name), axis=0)
+    return stack.reshape(k * export.shape[0], *export.shape[1:])
+
+
+def halo_aggregate(
+    z: jnp.ndarray,
+    send_idx: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_w: jnp.ndarray,
+    axis_name: str,
+    via: str = "all_gather",
+) -> jnp.ndarray:
+    """One distributed weighted aggregation O[r] = Σ w · Z[s] (per device).
+
+    z: (n_local, d) local features; the remaining args are this device's
+    slices of the plan tables. Exactly equals the global
+    ``repro.graph.ops.aggregate`` on the permuted layout (the subprocess
+    equivalence test): padding edges carry weight 0 and drop out of the sum.
+    """
+    halo = halo_exchange(z, send_idx, axis_name, via=via)
+    full = jnp.concatenate([z, halo], axis=0)             # [local ‖ halo]
+    return aggregate(full, senders, receivers, z.shape[0], edge_w)

@@ -1,0 +1,59 @@
+"""Named sharding policies: the model↔mesh contract (DESIGN.md §7.1).
+
+A :class:`ShardingPolicy` is a mesh plus a name→PartitionSpec dictionary.
+Models never mention mesh axes; they annotate semantic activation names
+(``"node_hidden"``, ``"act"``, ``"moe_buf"`` …) via ``policy.constrain`` and
+the launch layer decides what those names mean on the actual mesh
+(`repro.launch.shardings` builds the per-family policies). Names absent from
+the policy — and everything under :data:`NO_POLICY` — pass through untouched,
+so the same model code runs unsharded on one CPU device and sharded on a
+multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = ["ShardingPolicy", "NO_POLICY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """A mesh and the PartitionSpec each named activation should carry."""
+
+    mesh: Any = None
+    specs: Mapping[str, PartitionSpec] = dataclasses.field(default_factory=dict)
+
+    def spec(self, name: str) -> PartitionSpec | None:
+        """The PartitionSpec registered for ``name`` (None if unconstrained)."""
+        return self.specs.get(name)
+
+    def sharding(self, name: str) -> NamedSharding | None:
+        """The NamedSharding for ``name`` (None if unconstrained/mesh-less)."""
+        s = self.specs.get(name)
+        if self.mesh is None or s is None:
+            return None
+        return NamedSharding(self.mesh, s)
+
+    def constrain(self, x: jax.Array, name: str) -> jax.Array:
+        """Annotate ``x`` with the sharding registered under ``name``.
+
+        A no-op when the policy has no mesh (the :data:`NO_POLICY` case) or
+        the name is not registered — models can annotate freely without
+        caring which names the launch layer chose to constrain.
+        """
+        sh = self.sharding(name)
+        if sh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    def with_specs(self, **overrides: PartitionSpec) -> "ShardingPolicy":
+        """A copy with some names re-mapped (launch-layer experimentation)."""
+        return ShardingPolicy(mesh=self.mesh, specs={**self.specs, **overrides})
+
+
+#: The unsharded singleton: every ``constrain`` is the identity.
+NO_POLICY = ShardingPolicy()

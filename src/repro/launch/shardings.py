@@ -1,7 +1,9 @@
 """Per-family sharding rules over the production mesh (DESIGN.md §6).
 
-Rules are path-based over the param pytrees and return NamedShardings.
-Defaults encode the COIN-derived plan:
+Rules are path-based over the param pytrees and return NamedShardings; the
+activation-side policies built here are the name→PartitionSpec contract of
+DESIGN.md §7.1 (`repro.dist.policy.ShardingPolicy`). Defaults encode the
+COIN-derived plan:
 
   LM     — Megatron TP over `model` (QKV/up column-, O/down row-parallel),
            vocab-sharded embedding/logits, expert-parallel MoE weights,

@@ -12,7 +12,11 @@ aggregation backends:
 
 The layer-output broadcast of the COIN schedule (Fig. 5c) appears under pjit
 as the all-gather XLA inserts for the gather of node-sharded Z along edges —
-see `repro.launch.shardings` and DESIGN.md §2.
+see `repro.launch.shardings` and DESIGN.md §2. The communication-aware
+alternative — exchanging only boundary ("halo") vertices via
+`repro.dist.halo` instead of broadcasting full layer outputs — is specified
+in DESIGN.md §7.2–7.3; the `policy.constrain` calls below are the
+ShardingPolicy contract of DESIGN.md §7.1.
 """
 from __future__ import annotations
 

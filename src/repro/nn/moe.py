@@ -34,7 +34,16 @@ class MoEConfig:
 
     def capacity(self, n_tokens: int) -> int:
         cap = int(self.capacity_factor * n_tokens * self.top_k / self.num_experts)
-        return max(8, -(-cap // 8) * 8)  # round up to 8 for tiling
+        cap = max(8, -(-cap // 8) * 8)  # round up to 8 for tiling
+        # Streams of ≤ 512 tokens (decode steps, small teacher-forced
+        # prefills, unit graphs) dispatch drop-free: a token takes at most
+        # one slot per expert, so C ≥ T can never overflow. Within that
+        # bound stepwise decode equals the full forward pass exactly; above
+        # it capacity reverts to the Switch throughput/memory tradeoff and
+        # may drop tokens under routing imbalance (cf. hillclimb T1-c).
+        if n_tokens <= 512:
+            cap = max(cap, -(-n_tokens // 8) * 8)
+        return cap
 
 
 def moe_init(key: jax.Array, cfg: MoEConfig, dtype=jnp.float32) -> dict:

@@ -75,7 +75,9 @@ def compressed_psum_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     the mean. Wire bytes: 2 × n_elements × 1B vs 2 × n_elements × 4B for the
     fp32 psum — the 4× the roofline's collective term sees.
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of a literal folds to the static axis size on every jax version
+    # (jax.lax.axis_size only exists on newer builds).
+    n = jax.lax.psum(1, axis_name)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n
     flat = jnp.pad(flat, (0, pad))

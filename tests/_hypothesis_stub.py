@@ -1,0 +1,157 @@
+"""Minimal deterministic stand-in for `hypothesis` (registered by conftest.py
+ONLY when the real package is absent — environments with hypothesis installed
+use it untouched).
+
+Supports exactly the API surface this suite uses:
+
+    from hypothesis import assume, given, settings, strategies as st
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(lo, hi), y=st.sampled_from([...]), ...)
+
+Each test runs ``max_examples`` times over draws from a per-test seeded
+generator (seeded by the test's qualified name → stable across runs and
+processes). Bounds are drawn with elevated probability so the usual
+off-by-one edges still get exercised. No shrinking: on failure the drawn
+example is printed and the original exception propagates.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "assume", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self.label
+
+
+def _integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else int(min_value)
+    hi = lo + 1_000_000 if max_value is None else int(max_value)
+
+    def draw(rng: np.random.Generator, lo=lo, hi=hi):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return int(rng.integers(lo, hi + 1))
+
+    return _Strategy(draw, f"integers({lo}, {hi})")
+
+
+def _sampled_from(elements):
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return _Strategy(
+        lambda rng: elems[int(rng.integers(0, len(elems)))],
+        f"sampled_from({elems!r})",
+    )
+
+
+def _booleans():
+    return _sampled_from([False, True])
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: np.random.Generator, lo=lo, hi=hi):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return float(lo + (hi - lo) * rng.random())
+
+    return _Strategy(draw, f"floats({lo}, {hi})")
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+    floats=_floats,
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording the example budget on the (given-wrapped) test."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*args, **strategies_kw):
+    if args:
+        raise TypeError("hypothesis stub supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            max_examples = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(max_examples):
+                drawn = {name: s.draw(rng) for name, s in strategies_kw.items()}
+                try:
+                    fn(*a, **kw, **drawn)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+                except Exception:
+                    print(f"Falsifying example {fn.__qualname__}({drawn})")
+                    raise
+            if ran == 0:
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all {max_examples} "
+                    "examples — the test body never ran (mirrors hypothesis's "
+                    "Unsatisfied error)"
+                )
+
+        # Hide the inner test's parameters from pytest's fixture resolution:
+        # the strategies supply them, not fixtures.
+        del wrapper.__wrapped__
+        outer = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies_kw
+        ]
+        wrapper.__signature__ = inspect.Signature(outer)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+HealthCheck = types.SimpleNamespace(
+    too_slow="too_slow", data_too_large="data_too_large", filter_too_much="filter_too_much"
+)

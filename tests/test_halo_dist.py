@@ -71,20 +71,21 @@ for i in range(8):
     off += sizes[i]
 mesh = jax.make_mesh((8,), ("model",))
 si, sl, rl, ew = plan.device_arrays()
-f = jax.shard_map(
-    lambda zl, a, b, c, dd: halo_aggregate(zl[0], a[0], b[0], c[0], dd[0], "model")[None],
-    mesh=mesh, in_specs=(P("model"),) * 5, out_specs=P("model"), check_vma=False,
-)
-out = np.asarray(f(jnp.asarray(zb), si, sl, rl, ew))
 ref = np.asarray(aggregate(jnp.asarray(z), jnp.asarray(g.edge_index[0]),
                            jnp.asarray(g.edge_index[1]), g.n_nodes, jnp.asarray(w)))
-refb = np.zeros_like(out)
+refb = np.zeros_like(zb)
 off = 0
 for i in range(8):
     refb[i, :sizes[i]] = ref[plan.perm[off:off+sizes[i]]]
     off += sizes[i]
-err = np.abs(out - refb).max()
-assert err < 1e-4, err
+for via in ("all_gather", "ppermute"):    # both collective lowerings
+    f = jax.shard_map(
+        lambda zl, a, b, c, dd: halo_aggregate(zl[0], a[0], b[0], c[0], dd[0], "model", via=via)[None],
+        mesh=mesh, in_specs=(P("model"),) * 5, out_specs=P("model"), check_vma=False,
+    )
+    out = np.asarray(f(jnp.asarray(zb), si, sl, rl, ew))
+    err = np.abs(out - refb).max()
+    assert err < 1e-4, (via, err)
 print("HALO_OK", err)
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, timeout=300)
