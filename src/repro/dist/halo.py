@@ -26,10 +26,22 @@ checked by ``tests/test_halo_dist.py`` on the 2000-node/8-partition case.
 collectives, written against a 1-D mesh axis inside ``shard_map`` (all
 shapes static, so they lower to a single all_gather — or a ppermute ring —
 of the (s_max, d) export block).
+
+Since plans are pure host data and expensive to build at scale (partition +
+relocation over up to 10⁷–10⁸ edges), this module also owns the **plan
+cache** (DESIGN.md §8): plans are memoized per ``(graph_hash, k, mesh_axis)``
+so every layer of every epoch reuses the one relocation. ``cached_halo_plan``
+is the lazy entry point (the builder only runs on a miss), ``get_halo_plan``
+the eager one, and ``invalidate_halo_plans`` drops entries — called by
+``train/elastic.py`` when an elastic resize changes the model-parallel degree
+(a re-partition event; the current replan is the full rebuild, an incremental
+boundary-delta replan is a future optimization).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +52,20 @@ from repro.graph.ops import aggregate
 
 ensure_shard_map()
 
-__all__ = ["HaloPlan", "build_halo_plan", "halo_exchange", "halo_aggregate"]
+__all__ = [
+    "HaloPlan",
+    "build_halo_plan",
+    "halo_exchange",
+    "halo_aggregate",
+    "graph_fingerprint",
+    "cached_halo_plan",
+    "get_halo_plan",
+    "invalidate_halo_plans",
+    "plan_cache_stats",
+    "relocate_node_array",
+    "restore_node_array",
+    "node_mask",
+]
 
 
 @dataclasses.dataclass
@@ -61,6 +86,16 @@ class HaloPlan:
       receivers_l (k, e_local) int32 — per-edge local destination row.
       edge_w      (k, e_local) f32   — edge weight; exactly 0 ⇒ padding edge
                                        (contributes nothing to aggregates).
+      part_sizes  (k,) int64         — real (un-padded) rows per device block;
+                                       rows ≥ part_sizes[b] of block b are
+                                       zero padding.
+
+    The **s_max contract**: ``s_max`` is the size of the largest per-device
+    export set, and every device pads its export to exactly ``s_max`` rows
+    (with local row 0) so all k devices run the same static-shape program.
+    Consequently one exchange delivers exactly ``k·s_max`` halo rows per
+    device — the wire quantity the dry-run reports — and halo slot
+    ``j·s_max + t`` always holds row ``send_idx[j, t]`` of device j.
     """
 
     k: int
@@ -73,6 +108,7 @@ class HaloPlan:
     senders_l: np.ndarray
     receivers_l: np.ndarray
     edge_w: np.ndarray
+    part_sizes: np.ndarray | None = None
 
     # ---------------------------------------------------------------- wire
     @property
@@ -182,8 +218,149 @@ def build_halo_plan(part, edge_index: np.ndarray, w: np.ndarray | None = None) -
     return HaloPlan(
         k=k, n_local=n_local, s_max=s_max, e_local=e_local, n_nodes=n,
         perm=perm, send_idx=send_idx, senders_l=senders_l,
-        receivers_l=receivers_l, edge_w=edge_w,
+        receivers_l=receivers_l, edge_w=edge_w, part_sizes=sizes,
     )
+
+
+# ===================================================================== cache
+# Plans are pure host data keyed by (graph_hash, k, mesh_axis); one build
+# serves every layer of every epoch. The mesh axis participates in the key so
+# hierarchical (pod, model) extensions can cache per-axis plans side by side.
+_PLAN_CACHE: dict[tuple[str, int, str], HaloPlan] = {}
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def graph_fingerprint(
+    n_nodes: int,
+    edge_index: np.ndarray,
+    w: np.ndarray | None = None,
+    assignment: np.ndarray | None = None,
+) -> str:
+    """Stable content hash of a (graph, weights, partition) triple.
+
+    Used as the ``graph_hash`` component of the plan-cache key when the
+    caller has materialized arrays; callers that synthesize graphs
+    deterministically (e.g. the launch layer's shape-statistics graphs) can
+    pass their own string key instead and skip the hash entirely.
+    """
+    h = hashlib.sha1()
+    h.update(np.int64(n_nodes).tobytes())
+    h.update(np.ascontiguousarray(edge_index, dtype=np.int64).tobytes())
+    if w is not None:
+        h.update(np.ascontiguousarray(w, dtype=np.float32).tobytes())
+    if assignment is not None:
+        h.update(np.ascontiguousarray(assignment, dtype=np.int32).tobytes())
+    return h.hexdigest()
+
+
+def cached_halo_plan(
+    graph_key: str,
+    k: int,
+    mesh_axis: str = "model",
+    *,
+    builder: Callable[[], HaloPlan],
+) -> HaloPlan:
+    """Memoized plan lookup: ``builder()`` runs only on a cache miss.
+
+    ``graph_key`` identifies the graph (and, when relevant, the partition) —
+    either a :func:`graph_fingerprint` or any caller-chosen stable string.
+    The lazy builder matters at scale: on a hit, neither the graph nor the
+    partition needs to exist in memory at all.
+    """
+    key = (graph_key, int(k), mesh_axis)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_STATS["hits"] += 1
+        return plan
+    _PLAN_STATS["misses"] += 1
+    plan = builder()
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def get_halo_plan(
+    part,
+    edge_index: np.ndarray,
+    w: np.ndarray | None = None,
+    *,
+    mesh_axis: str = "model",
+    graph_key: str | None = None,
+) -> HaloPlan:
+    """Cached :func:`build_halo_plan`: same graph/partition/k → same object.
+
+    When ``graph_key`` is omitted the key is content-hashed from the edge
+    list, weights, AND the partition assignment (two partitions of the same
+    graph never collide). Mutating the graph or re-partitioning produces a
+    different key, i.e. a fresh plan.
+    """
+    if graph_key is None:
+        graph_key = graph_fingerprint(part.n_nodes, edge_index, w, part.assignment)
+    return cached_halo_plan(
+        graph_key, part.k, mesh_axis, builder=lambda: build_halo_plan(part, edge_index, w)
+    )
+
+
+def invalidate_halo_plans(graph_key: str | None = None) -> int:
+    """Drop cached plans (all of them, or one graph's). Returns #evicted.
+
+    ``train/elastic.py`` calls this on an elastic resize that changes the
+    model-parallel degree: the node→CE partition is stale, so every plan
+    derived from it is too. The next ``get_halo_plan``/``cached_halo_plan``
+    rebuilds from scratch (full replan — correct; an incremental
+    boundary-delta replan can slot in behind the same API later).
+    """
+    if graph_key is None:
+        n = len(_PLAN_CACHE)
+        _PLAN_CACHE.clear()
+        return n
+    victims = [key for key in _PLAN_CACHE if key[0] == graph_key]
+    for key in victims:
+        del _PLAN_CACHE[key]
+    return len(victims)
+
+
+def plan_cache_stats() -> dict[str, int]:
+    """{'hits', 'misses', 'size'} counters (hits/misses are process-lifetime)."""
+    return {**_PLAN_STATS, "size": len(_PLAN_CACHE)}
+
+
+# ============================================================= host relayout
+def relocate_node_array(plan: HaloPlan, x: np.ndarray) -> np.ndarray:
+    """Scatter a global per-node array (n_nodes, …) into the plan's blocked
+    layout (k, n_local, …); rows past ``part_sizes[b]`` are zero padding."""
+    if plan.part_sizes is None:
+        raise ValueError("plan has no part_sizes (built by an older writer)")
+    x = np.asarray(x)
+    out = np.zeros((plan.k, plan.n_local) + x.shape[1:], x.dtype)
+    off = 0
+    for b in range(plan.k):
+        sz = int(plan.part_sizes[b])
+        out[b, :sz] = x[plan.perm[off:off + sz]]
+        off += sz
+    return out
+
+
+def restore_node_array(plan: HaloPlan, blocks: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`relocate_node_array`: gather (k, n_local, …) device
+    blocks back into global node order, dropping the padding rows."""
+    if plan.part_sizes is None:
+        raise ValueError("plan has no part_sizes (built by an older writer)")
+    blocks = np.asarray(blocks)
+    out = np.zeros((plan.n_nodes,) + blocks.shape[2:], blocks.dtype)
+    off = 0
+    for b in range(plan.k):
+        sz = int(plan.part_sizes[b])
+        out[plan.perm[off:off + sz]] = blocks[b, :sz]
+        off += sz
+    return out
+
+
+def node_mask(plan: HaloPlan) -> np.ndarray:
+    """(k, n_local) float32 validity mask: 1 on real rows, 0 on padding."""
+    if plan.part_sizes is None:
+        raise ValueError("plan has no part_sizes (built by an older writer)")
+    rows = np.arange(plan.n_local)[None, :]
+    return (rows < np.asarray(plan.part_sizes)[:, None]).astype(np.float32)
 
 
 def halo_exchange(
@@ -234,8 +411,15 @@ def halo_aggregate(
 ) -> jnp.ndarray:
     """One distributed weighted aggregation O[r] = Σ w · Z[s] (per device).
 
-    z: (n_local, d) local features; the remaining args are this device's
-    slices of the plan tables. Exactly equals the global
+    z        — (n_local, d) this device's feature block.
+    send_idx — (s_max,) this device's export rows (see the s_max contract on
+               :class:`HaloPlan`).
+    senders  — (e_local,) per-edge source index into ``[local ‖ halo]``
+               (< n_local + k·s_max).
+    receivers— (e_local,) per-edge local destination row (< n_local).
+    edge_w   — (e_local,) weights; exactly 0 marks a padding edge, which
+               therefore contributes nothing to any sum.
+    Returns the (n_local, d) aggregate. Exactly equals the global
     ``repro.graph.ops.aggregate`` on the permuted layout (the subprocess
     equivalence test): padding edges carry weight 0 and drop out of the sum.
     """

@@ -1,4 +1,4 @@
-"""Named sharding policies: the model↔mesh contract (DESIGN.md §7.1).
+"""Named sharding policies: the model↔mesh contract (DESIGN.md §7.1, §8).
 
 A :class:`ShardingPolicy` is a mesh plus a name→PartitionSpec dictionary.
 Models never mention mesh axes; they annotate semantic activation names
@@ -8,6 +8,21 @@ the launch layer decides what those names mean on the actual mesh
 the policy — and everything under :data:`NO_POLICY` — pass through untouched,
 so the same model code runs unsharded on one CPU device and sharded on a
 multi-pod mesh.
+
+The policy also carries the GNN **communication mode** (DESIGN.md §8):
+
+* ``comm="broadcast"`` — the paper-faithful Fig. 5c schedule: node arrays are
+  pjit-sharded and XLA inserts layer-output all-gathers for cross-shard edge
+  reads. ``neighbor_table`` is the identity (senders index global rows).
+* ``comm="halo"`` — the default full-graph schedule: the model runs inside
+  ``shard_map`` over a :class:`~repro.dist.halo.HaloPlan` layout, and
+  ``neighbor_table(h)`` returns ``[local ‖ halo]`` — the device block plus
+  the exchanged boundary rows — which plan-relocalized senders index.
+
+Models call ``policy.neighbor_table(x)`` before every sender-side gather and
+work identically under both modes (and under :data:`NO_POLICY`, where the
+table is again the identity). The halo mode only activates once the launch
+layer binds the device's export rows via ``bind_halo`` inside ``shard_map``.
 """
 from __future__ import annotations
 
@@ -22,10 +37,16 @@ __all__ = ["ShardingPolicy", "NO_POLICY"]
 
 @dataclasses.dataclass(frozen=True)
 class ShardingPolicy:
-    """A mesh and the PartitionSpec each named activation should carry."""
+    """A mesh, the PartitionSpec each named activation should carry, and the
+    GNN communication mode (broadcast vs halo — DESIGN.md §8)."""
 
     mesh: Any = None
     specs: Mapping[str, PartitionSpec] = dataclasses.field(default_factory=dict)
+    comm: str = "broadcast"            # "broadcast" | "halo"
+    halo_axis: str = "model"           # mesh axis the exchange runs over
+    halo_via: str = "all_gather"       # collective lowering (see halo_exchange)
+    halo_send_idx: Any = None          # (s_max,) device export rows; bound
+                                       # inside shard_map via bind_halo
 
     def spec(self, name: str) -> PartitionSpec | None:
         """The PartitionSpec registered for ``name`` (None if unconstrained)."""
@@ -52,7 +73,36 @@ class ShardingPolicy:
 
     def with_specs(self, **overrides: PartitionSpec) -> "ShardingPolicy":
         """A copy with some names re-mapped (launch-layer experimentation)."""
-        return ShardingPolicy(mesh=self.mesh, specs={**self.specs, **overrides})
+        return dataclasses.replace(self, specs={**self.specs, **overrides})
+
+    # ------------------------------------------------- GNN communication mode
+    @property
+    def is_halo(self) -> bool:
+        """True once halo mode is armed: comm == "halo" AND the device's
+        export rows are bound (i.e. we are inside the shard_map body)."""
+        return self.comm == "halo" and self.halo_send_idx is not None
+
+    def bind_halo(self, send_idx: jax.Array) -> "ShardingPolicy":
+        """Copy with this device's (s_max,) export rows bound — called by the
+        launch layer inside the shard_map body, where ``send_idx`` is the
+        device's slice of ``HaloPlan.send_idx``."""
+        return dataclasses.replace(self, halo_send_idx=send_idx)
+
+    def neighbor_table(self, x: jax.Array) -> jax.Array:
+        """The table sender indices gather from.
+
+        Broadcast / NO_POLICY / unbound halo: ``x`` itself (senders are
+        global rows). Armed halo: ``[x ‖ halo_exchange(x)]`` of shape
+        ``(n_local + k·s_max, d)``, which the plan's re-localized senders
+        index. Models call this before every sender-side gather; receiver-side
+        gathers stay on ``x`` directly (receivers are always local rows).
+        """
+        if not self.is_halo:
+            return x
+        from repro.dist.halo import halo_exchange
+
+        halo = halo_exchange(x, self.halo_send_idx, self.halo_axis, via=self.halo_via)
+        return jax.numpy.concatenate([x, halo], axis=0)
 
 
 #: The unsharded singleton: every ``constrain`` is the identity.

@@ -110,15 +110,32 @@ def multi_aggregate_edges(
     messages: jnp.ndarray,
     receivers: jnp.ndarray,
     num_nodes: int,
+    edge_mask: jnp.ndarray | None = None,
 ) -> dict[str, jnp.ndarray]:
-    """PNA aggregators over per-edge messages (already gathered/transformed)."""
-    ssum = jax.ops.segment_sum(messages, receivers, num_segments=num_nodes)
-    sqsum = jax.ops.segment_sum(messages * messages, receivers, num_segments=num_nodes)
-    cnt = jnp.maximum(degrees(receivers, num_nodes), 1.0)[:, None]
+    """PNA aggregators over per-edge messages (already gathered/transformed).
+
+    edge_mask: optional (E,) 0/1 validity — masked edges are excluded from
+    every statistic (count, mean, std, max, min). Used by the halo comm path,
+    whose plan pads edge lists with weight-0 edges (DESIGN.md §8).
+    """
+    if edge_mask is None:
+        msum = messages
+        cnt = jnp.maximum(degrees(receivers, num_nodes), 1.0)[:, None]
+        mmax = mmin = messages
+    else:
+        m = edge_mask[:, None]
+        msum = messages * m
+        cnt = jnp.maximum(
+            jax.ops.segment_sum(edge_mask, receivers, num_segments=num_nodes), 1.0
+        )[:, None]
+        mmax = jnp.where(m > 0, messages, -jnp.inf)
+        mmin = jnp.where(m > 0, messages, jnp.inf)
+    ssum = jax.ops.segment_sum(msum, receivers, num_segments=num_nodes)
+    sqsum = jax.ops.segment_sum(msum * messages, receivers, num_segments=num_nodes)
     mean = ssum / cnt
     var = jnp.maximum(sqsum / cnt - mean * mean, 0.0)
-    smax = jax.ops.segment_max(messages, receivers, num_segments=num_nodes)
-    smin = jax.ops.segment_min(messages, receivers, num_segments=num_nodes)
+    smax = jax.ops.segment_max(mmax, receivers, num_segments=num_nodes)
+    smin = jax.ops.segment_min(mmin, receivers, num_segments=num_nodes)
     smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
     smin = jnp.where(jnp.isfinite(smin), smin, 0.0)
     return {"mean": mean, "max": smax, "min": smin, "std": jnp.sqrt(var + 1e-8)}

@@ -31,7 +31,7 @@ import traceback
 
 __doc__ = _DOC
 
-__all__ = ["run_cell", "collective_bytes", "main"]
+__all__ = ["run_cell", "collective_bytes", "exchange_accounting", "main"]
 
 RESULTS_PATH = "results/dryrun.json"
 
@@ -124,9 +124,32 @@ def extrapolated_cost(cell, mesh) -> tuple[float, float, dict]:
     return fit(f1, f2), fit(b1, b2), coll
 
 
+def exchange_accounting(cell, shape) -> dict | None:
+    """Analytic per-device wire rows of the GNN layer exchange (DESIGN.md §8).
+
+    Halo cells carry their HaloPlan, so the reported bytes-moved reflects the
+    ``k·s_max`` boundary rows each device actually receives — not the
+    ``(k−1)·n_local`` a broadcast schedule would ship; both numbers are
+    recorded so the wire cut is visible per record. Cells without a plan
+    (non-GNN, sampled, or forced-broadcast) return just the comm tag.
+    """
+    plan = getattr(cell, "halo_plan", None)
+    if plan is None:
+        return {"comm": cell.comm} if getattr(cell, "comm", None) else None
+    d = shape.d_feat or 0
+    return {
+        "comm": cell.comm,
+        "halo_rows_per_device": plan.halo_rows_per_device,
+        "broadcast_rows_per_device": plan.broadcast_rows_per_device,
+        "wire_fraction": plan.wire_fraction(),
+        "halo_bytes_per_exchange": plan.halo_rows_per_device * d * 4,
+        "broadcast_bytes_per_exchange": plan.broadcast_rows_per_device * d * 4,
+    }
+
+
 def run_cell(
     arch_id: str, shape_name: str, multi_pod: bool, verbose: bool = True,
-    optimized: bool = False,
+    optimized: bool = False, comm: str | None = None,
 ) -> dict:
     import jax
 
@@ -139,7 +162,9 @@ def run_cell(
     rec: dict = {
         "arch": arch_id,
         "shape": shape_name,
-        "mesh": ("2x16x16" if multi_pod else "16x16") + ("+opt" if optimized else ""),
+        "mesh": ("2x16x16" if multi_pod else "16x16")
+        + ("+opt" if optimized else "")
+        + (f"+{comm}" if comm else ""),
         "ts": time.time(),
     }
     if shape.skip_reason:
@@ -149,7 +174,7 @@ def run_cell(
     n_chips = mesh.devices.size
     try:
         t0 = time.time()
-        cell = build_cell(spec, shape, mesh, optimized=optimized)
+        cell = build_cell(spec, shape, mesh, optimized=optimized, comm=comm)
         lowered = cell.lower(mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -201,6 +226,7 @@ def run_cell(
             model_flops=cell.model_flops,
             useful_flops_ratio=(cell.model_flops / (flops * n_chips)) if flops else None,
             note=cell.note,
+            exchange=exchange_accounting(cell, shape),
         )
         if verbose:
             print(f"[{rec['mesh']}] {arch_id} × {shape_name}: OK "
@@ -240,7 +266,17 @@ def main(argv=None) -> int:
     ap.add_argument("--force", action="store_true", help="re-run cached cells")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the §Perf findings (beyond-paper variants)")
+    ap.add_argument("--comm", choices=["default", "halo", "broadcast"], default="default",
+                    help="full-graph GNN communication schedule (DESIGN.md §8). "
+                         "'halo' IS the default (same records, no tag suffix); "
+                         "'broadcast' = the Fig. 5c escape hatch, recorded under "
+                         "a '+broadcast' mesh tag. GNN records produced before "
+                         "the halo default landed measured the broadcast "
+                         "schedule — re-run them with --force.")
     args = ap.parse_args(argv)
+    # "halo" is the default schedule: map both spellings to comm=None so the
+    # identical computation never gets cached twice under different tags.
+    comm = "broadcast" if args.comm == "broadcast" else None
 
     from repro.configs import get_arch, ASSIGNED_ARCHS
 
@@ -254,12 +290,16 @@ def main(argv=None) -> int:
         shapes = [args.shape] if args.shape else list(spec.shapes)
         for shape_name in shapes:
             for multi in meshes:
-                mesh_tag = ("2x16x16" if multi else "16x16") + ("+opt" if args.optimized else "")
+                mesh_tag = (
+                    ("2x16x16" if multi else "16x16")
+                    + ("+opt" if args.optimized else "")
+                    + (f"+{comm}" if comm else "")
+                )
                 key = (arch_id, shape_name, mesh_tag)
                 if key in done and not args.force:
                     print(f"[cached] {key}")
                     continue
-                rec = run_cell(arch_id, shape_name, multi, optimized=args.optimized)
+                rec = run_cell(arch_id, shape_name, multi, optimized=args.optimized, comm=comm)
                 records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
                 records.append(rec)
                 _save(args.out, records)

@@ -129,7 +129,13 @@ def replicated_specs(param_tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda leaf: P(*([None] * len(leaf.shape))), param_tree)
 
 
-def gnn_policy(mesh, batched: bool) -> ShardingPolicy:
+def gnn_policy(mesh, batched: bool, comm: str = "halo") -> ShardingPolicy:
+    """GNN activation policy. ``comm`` selects the full-graph communication
+    schedule (DESIGN.md §8): "halo" (default — boundary-only exchange over a
+    HaloPlan, inside shard_map) or "broadcast" (the paper's Fig. 5c layer-
+    output all-gather via pjit sharding propagation, kept as the escape
+    hatch). Batched (sampled-block) cells have no cross-shard edges, so the
+    mode is irrelevant there."""
     da = data_axes(mesh)
     if batched:
         return ShardingPolicy(
@@ -140,6 +146,12 @@ def gnn_policy(mesh, batched: bool) -> ShardingPolicy:
                 "irrep_hidden": P(da, None, None, None),
             },
         )
+    if comm not in ("halo", "broadcast"):
+        raise ValueError(f"unknown comm mode {comm!r} (expected 'halo' or 'broadcast')")
+    if comm == "halo":
+        # Inside shard_map the per-device block is unsharded; constrain calls
+        # are no-ops (no registered names) and the exchange is explicit.
+        return ShardingPolicy(mesh=mesh, specs={}, comm="halo", halo_axis="model")
     return ShardingPolicy(
         mesh=mesh,
         specs={

@@ -14,6 +14,13 @@ Step kinds per family:
   recsys/train  — BCE loss + grads + AdamW
   recsys/serve  — batched logits
   recsys/retrieval — 1×N candidate scoring
+
+Full-graph GNN cells default to the **halo** communication schedule
+(DESIGN.md §8): the step runs inside shard_map over a cached
+`repro.dist.halo.HaloPlan`, exchanging only boundary rows per layer
+(`k·s_max` received rows/device) instead of the broadcast all-gather
+(`(k−1)·n_local`). Pass ``comm="broadcast"`` to `build_cell` for the
+paper-faithful Fig. 5c schedule (the escape hatch and the dry-run baseline).
 """
 from __future__ import annotations
 
@@ -60,6 +67,12 @@ class Cell:
     cost_cells: list[tuple["Cell", float]] | None = None
     cost_groups: float = 1.0
     donate_argnums: tuple = ()
+    # GNN full-graph cells: which communication schedule the step uses
+    # ("halo" | "broadcast"; None for non-GNN / sampled cells) and, for halo,
+    # the HaloPlan whose static shapes the abstract batch follows — the
+    # dry-run reads wire accounting (k·s_max vs (k−1)·n_local) off it.
+    comm: str | None = None
+    halo_plan: Any = None
 
     def lower(self, mesh):
         jitted = jax.jit(
@@ -399,7 +412,180 @@ def _sampled_edges(shape: ShapeSpec) -> int:
     return e
 
 
-def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32, _as_cost_cell: bool = False) -> Cell:
+def _shape_halo_plan(n: int, e: int, k: int):
+    """Cached HaloPlan for the (n, e) shape-statistics synthetic graph.
+
+    Abstract cells have no real graph — like the rest of the dry-run they run
+    on the deterministic exact-count synthetic (DESIGN.md §5), partitioned
+    with the locality-seeking BFS+refine that keeps export sets small
+    (DESIGN.md §7.3). The plan is memoized per (graph, k, axis) in
+    `repro.dist.halo`, so every layer/epoch/cell over the same shape reuses
+    one host-side relocation; the deterministic string key means a cache hit
+    skips graph synthesis and partitioning entirely.
+    """
+    from repro.dist.halo import build_halo_plan, cached_halo_plan
+
+    def build():
+        from repro.core.partition import partition_graph
+        from repro.graph.generators import citation_like
+
+        g = citation_like(n, e, seed=0)
+        part = partition_graph(n, g.edge_index, k, method="bfs", seed=0, refine=True)
+        return build_halo_plan(part, g.edge_index)
+
+    return cached_halo_plan(f"citation_like:n{n}:e{e}:seed0", k, builder=build)
+
+
+def _gnn_halo_device_loss(arch_id: str, cfg):
+    """Per-device (weighted_sum, weight) of the arch's loss over one block.
+
+    Runs inside the shard_map body: every array is this device's slice of the
+    HaloPlan layout, ``pol`` has the device's export rows bound, and padding
+    (edge_w == 0 edges, rows ≥ part_size) is masked out so the psum-combined
+    loss equals the global single-device loss exactly.
+    """
+
+    def device_loss(params, b, pol):
+        edge_mask = (b["edge_w"] > 0).astype(F32)
+        if arch_id == "coin_gcn":
+            from repro.models.gcn import gcn_forward
+
+            logits = gcn_forward(
+                params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol
+            ).astype(F32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, b["labels"][:, None], axis=-1)[:, 0]
+            return ((lse - gold) * b["label_mask"]).sum(), b["label_mask"].sum()
+        if arch_id == "pna":
+            from repro.models.pna import pna_forward
+
+            pred = pna_forward(
+                params, b["feats"], b["senders"], b["receivers"], cfg, pol, edge_mask=edge_mask
+            )
+        elif arch_id == "egnn":
+            from repro.models.egnn import egnn_forward
+
+            pred, _ = egnn_forward(
+                params, b["feats"], b["pos"], b["senders"], b["receivers"], cfg, pol,
+                edge_mask=edge_mask,
+            )
+        elif arch_id == "graphcast":
+            from repro.models.graphcast import graphcast_forward
+
+            pred = graphcast_forward(
+                params, b["feats"], b["edge_feats"], b["senders"], b["receivers"], cfg, pol,
+                edge_mask=edge_mask,
+            )
+        elif arch_id == "equiformer-v2":
+            from repro.models.equiformer_v2 import equiformer_forward
+
+            pred = equiformer_forward(
+                params, b["feats"], b["pos"], b["senders"], b["receivers"], cfg, pol,
+                edge_mask=edge_mask,
+            )
+        else:
+            raise KeyError(arch_id)
+        sq = jnp.sum(jnp.square(pred.astype(F32) - b["target"]), axis=-1)
+        return (sq * b["node_mask"]).sum(), b["node_mask"].sum() * pred.shape[-1]
+
+    return device_loss
+
+
+def _gnn_halo_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, plan) -> dict:
+    """Abstract batch in the HaloPlan blocked layout: per-node arrays are
+    (k, n_local, …), per-edge arrays (k, e_local, …), plus the plan tables."""
+    k, n_local, e_local = plan.k, plan.n_local, plan.e_local
+    si, sl, rl, ew = plan.abstract_inputs()
+    batch = {
+        "feats": _sds((k, n_local, shape.d_feat), F32),
+        "send_idx": si,
+        "senders": sl,
+        "receivers": rl,
+        "edge_w": ew,
+    }
+    if arch_id in ("egnn", "equiformer-v2"):
+        batch["pos"] = _sds((k, n_local, 3), F32)
+    if arch_id == "graphcast":
+        batch["edge_feats"] = _sds((k, e_local, cfg.d_edge_in), F32)
+    if arch_id == "coin_gcn":
+        batch["labels"] = _sds((k, n_local), I32)
+        batch["label_mask"] = _sds((k, n_local), F32)
+    else:
+        n_out = cfg.n_vars if arch_id == "graphcast" else getattr(cfg, "d_out", 1)
+        batch["target"] = _sds((k, n_local, n_out), F32)
+        batch["node_mask"] = _sds((k, n_local), F32)
+    return batch
+
+
+def _gnn_halo_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, cfg, cost_cells, dtype=F32
+) -> Cell:
+    """Full-graph GNN train cell over the halo schedule (the default path).
+
+    The whole step runs inside shard_map on the "model" axis: each device
+    holds one HaloPlan block and every layer's neighbor aggregation goes
+    through `halo_exchange`/`halo_aggregate`-style boundary collectives via
+    ``policy.neighbor_table`` (DESIGN.md §8). Wire per device per exchange is
+    ``k·s_max`` rows vs the broadcast schedule's ``(k−1)·n_local``.
+    """
+    k = mesh.shape["model"]
+    n_raw, e_raw = _gnn_sizes(shape, pad_mult=1)
+    plan = _shape_halo_plan(n_raw, e_raw, k)
+    policy = sh.gnn_policy(mesh, batched=False, comm="halo")
+
+    params_abs = _gnn_params(spec.arch_id, cfg, dtype)
+    p_specs = sh.replicated_specs(params_abs)
+    p_shard = sh.tree_named(mesh, p_specs)
+    batch_abs = _gnn_halo_batch_abstract(spec.arch_id, shape, cfg, plan)
+    keys = sorted(batch_abs)
+    batch_spec = {
+        kk: sh.named(mesh, P("model", *([None] * (len(v.shape) - 1))))
+        for kk, v in batch_abs.items()
+    }
+    device_loss = _gnn_halo_device_loss(spec.arch_id, cfg)
+
+    def total_loss(params, batch):
+        def body(*args):
+            b = {kk: a[0] for kk, a in zip(keys, args)}
+            pol = policy.bind_halo(b["send_idx"])
+            wsum, wcnt = device_loss(params, b, pol)
+            loss = jax.lax.psum(wsum, "model") / jnp.maximum(
+                jax.lax.psum(wcnt, "model"), 1.0
+            )
+            return loss[None]
+        f = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P("model"),) * len(keys), out_specs=P("model"),
+        )
+        return f(*[batch[kk] for kk in keys]).mean()
+
+    opt = adamw(lr=1e-3)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_shard = sh.tree_named(mesh, _opt_specs(opt_abs, p_specs))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(total_loss)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return Cell(
+        spec.arch_id, shape.name, "train_step",
+        train_step,
+        (params_abs, opt_abs, batch_abs),
+        (p_shard, o_shard, batch_spec),
+        (p_shard, o_shard, sh.named(mesh, P())),
+        model_flops=_gnn_flops(spec.arch_id, shape, cfg) * 3.0,
+        note=f"full graph (halo k={k} s_max={plan.s_max} n_local={plan.n_local})",
+        cost_cells=cost_cells,
+        comm="halo",
+        halo_plan=plan,
+    )
+
+
+def _gnn_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32,
+    _as_cost_cell: bool = False, comm: str | None = None,
+) -> Cell:
     import dataclasses as dc
 
     cfg = spec.make_config(shape)
@@ -413,14 +599,20 @@ def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32, _as_cost_cell: 
         # Cost cell: the unchunked variant — its HLO is fully counted by
         # cost_analysis (the rolled chunk scan body would be counted once).
         flat_spec = dc.replace(spec, make_config=lambda s=None, c=cfg: c)
-        cost_cells = [(_gnn_cell(flat_spec, shape, mesh, dtype, _as_cost_cell=True), 1.0)]
+        cost_cells = [
+            (_gnn_cell(flat_spec, shape, mesh, dtype, _as_cost_cell=True, comm=comm), 1.0)
+        ]
         cfg = dc.replace(cfg, edge_chunk=-(-shape.n_edges // 64))
     da = data_axes(mesh)
     n_data = int(np.prod([mesh.shape[a] for a in da]))
     msize = mesh.shape["model"]
     sampled = shape.batch_nodes is not None
+    if comm is None:
+        comm = "broadcast" if sampled else "halo"
+    if not sampled and comm == "halo":
+        return _gnn_halo_cell(spec, shape, mesh, cfg, cost_cells, dtype)
     n_blocks = n_data if sampled else None
-    policy = NO_POLICY if sampled else sh.gnn_policy(mesh, batched=False)
+    policy = NO_POLICY if sampled else sh.gnn_policy(mesh, batched=False, comm="broadcast")
 
     params_abs = _gnn_params(spec.arch_id, cfg, dtype)
     p_specs = sh.replicated_specs(params_abs)
@@ -473,8 +665,9 @@ def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32, _as_cost_cell: 
         (p_shard, o_shard, batch_spec),
         (p_shard, o_shard, sh.named(mesh, P())),
         model_flops=flops,
-        note="sampled blocks ×%d" % (n_blocks or 1) if sampled else "full graph",
+        note="sampled blocks ×%d" % (n_blocks or 1) if sampled else "full graph (broadcast)",
         cost_cells=cost_cells,
+        comm=None if sampled else "broadcast",
     )
 
 
@@ -554,14 +747,22 @@ def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32) -> Cell:
 
 
 # ==================================================================== factory
-def build_cell(spec: ArchSpec, shape: ShapeSpec, mesh, optimized: bool = False) -> Cell:
+def build_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, optimized: bool = False,
+    comm: str | None = None,
+) -> Cell:
     """optimized=True applies the §Perf findings (hierarchical MoE dispatch,
     remat on train, param/opt/cache donation) — the beyond-paper variants
-    recorded separately from the baselines in EXPERIMENTS.md."""
+    recorded separately from the baselines in EXPERIMENTS.md.
+
+    comm selects the full-graph GNN communication schedule: None → the
+    family default ("halo" for full-graph cells, DESIGN.md §8);
+    "broadcast" → the paper-faithful layer-output all-gather escape hatch.
+    Non-GNN families ignore it."""
     if spec.family == "lm":
         return _lm_cell(spec, shape, mesh, optimized=optimized)
     if spec.family == "gnn":
-        return _gnn_cell(spec, shape, mesh)
+        return _gnn_cell(spec, shape, mesh, comm=comm)
     if spec.family == "recsys":
         return _recsys_cell(spec, shape, mesh)
     raise KeyError(spec.family)

@@ -52,18 +52,30 @@ def egnn_forward(
     receivers: jnp.ndarray,
     cfg: EGNNConfig,
     policy: ShardingPolicy = NO_POLICY,
+    edge_mask: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     n = h.shape[0]
     h = mlp_apply(params["enc"], h)
-    deg = jnp.maximum(degrees(receivers, n), 1.0)
+    if edge_mask is None:
+        deg = jnp.maximum(degrees(receivers, n), 1.0)
+    else:
+        # Halo comm path: padding edges (mask 0) must not count as neighbors.
+        deg = jnp.maximum(jax.ops.segment_sum(edge_mask, receivers, num_segments=n), 1.0)
     for i in range(cfg.n_layers):
-        rel = x[receivers] - x[senders]                      # (E, 3)
+        # One fused exchange of [x ‖ h] per layer (x mutates each layer, so
+        # unlike equiformer's static pos it cannot be exchanged once).
+        xh = policy.neighbor_table(jnp.concatenate([x, h], axis=-1))
+        xt, ht = xh[:, :3], xh[:, 3:]
+        rel = x[receivers] - xt[senders]                     # (E, 3)
         d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
-        m_in = jnp.concatenate([h[receivers], h[senders], d2], axis=-1)
+        m_in = jnp.concatenate([h[receivers], ht[senders], d2], axis=-1)
         m = mlp_apply(params[f"phi_e{i}"], m_in)             # (E, d)
+        if edge_mask is not None:
+            m = m * edge_mask[:, None]
         # Coordinate update (equivariant): weighted relative vectors.
         cw = jnp.clip(mlp_apply(params[f"phi_x{i}"], m), -cfg.coord_clamp, cfg.coord_clamp)
-        dx = jax.ops.segment_sum(rel * cw, receivers, num_segments=n)
+        xw = rel * cw if edge_mask is None else rel * cw * edge_mask[:, None]
+        dx = jax.ops.segment_sum(xw, receivers, num_segments=n)
         x = x + dx / deg[:, None]
         # Feature update (invariant).
         magg = jax.ops.segment_sum(m, receivers, num_segments=n)

@@ -164,6 +164,7 @@ def equiformer_forward(
     receivers: jnp.ndarray,
     cfg: EquiformerV2Config,
     policy: ShardingPolicy = NO_POLICY,
+    edge_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     N = feats.shape[0]
     C, K = cfg.d_hidden, cfg.k_comps
@@ -174,24 +175,31 @@ def equiformer_forward(
     # ghost padding) have no direction — masked out, which is both the
     # physically correct cutoff behaviour and what keeps the model exactly
     # SO(3)-equivariant (a directionless edge cannot carry l>0 messages).
-    rel = pos[receivers] - pos[senders]
+    pos_tab = policy.neighbor_table(pos)
+    rel = pos[receivers] - pos_tab[senders]
     dist = jnp.linalg.norm(rel, axis=-1) + 1e-9
     edge_ok = (dist > 1e-6).astype(feats.dtype)
+    if edge_mask is not None:
+        edge_ok = edge_ok * edge_mask
     u = rel / dist[:, None]
     D = real_sh_rotations(rotation_align_z(u), cfg.l_max)
     rbf = _rbf(dist, cfg)
 
     for lp in params["layers"]:
         hn = _eq_norm(h, lp["norm_g"], cfg)
+        hn_tab = policy.neighbor_table(hn)
         radial = mlp_apply(lp["radial"], rbf)
         # Attention logits need only invariants — cheap, computed unchunked.
-        inv = jnp.concatenate([hn[senders][:, 0, :], hn[receivers][:, 0, :], rbf], axis=-1)
+        inv = jnp.concatenate([hn_tab[senders][:, 0, :], hn[receivers][:, 0, :], rbf], axis=-1)
         logits = mlp_apply(lp["attn"], inv)                   # (E, heads)
+        if edge_mask is not None:
+            # Padding edges must not dilute the softmax of real incoming edges.
+            logits = jnp.where(edge_mask[:, None] > 0, logits, -1e30)
         alpha = segment_softmax(logits, receivers, N)         # (E, heads)
         alpha_c = jnp.repeat(alpha, C // cfg.n_heads, axis=-1) * edge_ok[:, None]
         if cfg.edge_chunk is None:
             # ---- eSCN message: rotate → SO(2) conv → attn weight → rotate back
-            src = block_diag_apply(D, hn[senders])
+            src = block_diag_apply(D, hn_tab[senders])
             msg = _so2_conv(lp, src, radial, cfg)             # (E, K, C)
             msg = msg * alpha_c[:, None, :]
             msg = block_diag_apply_T(D, msg)
@@ -199,7 +207,7 @@ def equiformer_forward(
         else:
             # Chunked path: the (E, K, C) message tensor never materializes —
             # required for the 10⁷–10⁸-edge assigned cells (memory roofline).
-            agg = _chunked_messages(lp, hn, D, radial, alpha_c, senders, receivers, N, cfg)
+            agg = _chunked_messages(lp, hn_tab, D, radial, alpha_c, senders, receivers, N, cfg)
         h = h + agg
         h = policy.constrain(h, "irrep_hidden")
         # ---- gated equivariant FFN

@@ -10,13 +10,14 @@ aggregation backends:
   * "dense"   — dense Ã matmul (the paper's crossbars store zeros too; used
                 by the FLOP-accounting benchmarks, not for large graphs).
 
-The layer-output broadcast of the COIN schedule (Fig. 5c) appears under pjit
-as the all-gather XLA inserts for the gather of node-sharded Z along edges —
-see `repro.launch.shardings` and DESIGN.md §2. The communication-aware
-alternative — exchanging only boundary ("halo") vertices via
-`repro.dist.halo` instead of broadcasting full layer outputs — is specified
-in DESIGN.md §7.2–7.3; the `policy.constrain` calls below are the
-ShardingPolicy contract of DESIGN.md §7.1.
+Communication (DESIGN.md §8): the aggregation gathers sender rows from
+``policy.neighbor_table(z)``. Under the default halo mode (inside shard_map
+over a `repro.dist.halo.HaloPlan`) that table is ``[local ‖ halo]`` and only
+boundary vertices cross the wire; under ``comm="broadcast"`` (the paper's
+Fig. 5c schedule, kept as the escape hatch) the table is the identity and
+XLA inserts the layer-output all-gather for the node-sharded gather — see
+`repro.launch.shardings` and DESIGN.md §2. The `policy.constrain` calls
+below are the ShardingPolicy contract of DESIGN.md §7.1.
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.dataflow import choose_order
 from repro.core.quant import QuantConfig, fake_quant
 from repro.dist.policy import NO_POLICY, ShardingPolicy
-from repro.graph.ops import aggregate_padded
+from repro.graph.ops import aggregate, aggregate_padded
 
 __all__ = ["GCNConfig", "gcn_init", "gcn_forward", "gcn_loss"]
 
@@ -77,6 +78,12 @@ def gcn_forward(
     q = cfg.quant
 
     def agg(z: jnp.ndarray) -> jnp.ndarray:
+        if policy.is_halo:
+            # Halo mode (DESIGN.md §8): senders index [local ‖ halo]; padding
+            # edges carry weight 0 so no ghost row is needed.
+            if cfg.backend != "segment":
+                raise ValueError("halo comm supports only the 'segment' backend")
+            return aggregate(policy.neighbor_table(z), senders, receivers, n_nodes, edge_weight)
         if cfg.backend == "segment":
             return aggregate_padded(z, senders, receivers, n_nodes, edge_weight)
         if cfg.backend == "dense":

@@ -80,6 +80,7 @@ def graphcast_forward(
     receivers: jnp.ndarray,
     cfg: GraphCastConfig,
     policy: ShardingPolicy = NO_POLICY,
+    edge_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     n = x.shape[0]
     h = layer_norm(mlp_apply(params["enc_node"], x), params["enc_node_ln"]["g"], params["enc_node_ln"]["b"])
@@ -88,10 +89,13 @@ def graphcast_forward(
     e = policy.constrain(e, "edge_hidden")
     for i in range(cfg.n_layers):
         # Interaction network: update edges, then nodes; residual + LN both.
-        e_in = jnp.concatenate([e, h[senders], h[receivers]], axis=-1)
+        tab = policy.neighbor_table(h)
+        e_in = jnp.concatenate([e, tab[senders], h[receivers]], axis=-1)
         e_upd = mlp_apply(params[f"edge_mlp{i}"], e_in)
         e = e + layer_norm(e_upd, params[f"edge_ln{i}"]["g"], params[f"edge_ln{i}"]["b"])
-        agg = jax.ops.segment_sum(e, receivers, num_segments=n)   # sum aggregator
+        # Halo comm path: padding-edge latents evolve but never aggregate.
+        e_agg = e if edge_mask is None else e * edge_mask[:, None]
+        agg = jax.ops.segment_sum(e_agg, receivers, num_segments=n)  # sum aggregator
         h_in = jnp.concatenate([h, agg], axis=-1)
         h_upd = mlp_apply(params[f"node_mlp{i}"], h_in)
         h = h + layer_norm(h_upd, params[f"node_ln{i}"]["g"], params[f"node_ln{i}"]["b"])

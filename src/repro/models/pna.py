@@ -53,18 +53,24 @@ def pna_forward(
     receivers: jnp.ndarray,
     cfg: PNAConfig,
     policy: ShardingPolicy = NO_POLICY,
+    edge_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     n = x.shape[0]
     h = jax.nn.relu(linear(params["enc"], x))
-    deg = degrees(receivers, n)
+    if edge_mask is None:
+        deg = degrees(receivers, n)
+    else:
+        # Halo comm path: padding edges (mask 0) must not count as neighbors.
+        deg = jax.ops.segment_sum(edge_mask, receivers, num_segments=n)
     logd = jnp.log1p(deg)[:, None]
     amp = logd / cfg.mean_log_degree
     att = cfg.mean_log_degree / jnp.maximum(logd, 1e-6)
     for i in range(cfg.n_layers):
-        msg_in = jnp.concatenate([h[senders], h[receivers]], axis=-1)
+        tab = policy.neighbor_table(h)
+        msg_in = jnp.concatenate([tab[senders], h[receivers]], axis=-1)
         msg = jax.nn.relu(linear(params[f"pre{i}"], msg_in))
         # Aggregate the transformed messages by receiver.
-        aggs = multi_aggregate_edges(msg, receivers, n)
+        aggs = multi_aggregate_edges(msg, receivers, n, edge_mask)
         feats = []
         for a in ("mean", "max", "min", "std"):
             v = aggs[a]

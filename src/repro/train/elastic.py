@@ -44,13 +44,22 @@ def elastic_replan(
     Model-parallel shards hold partitioned state (the COIN CE partition —
     can't shrink without re-partitioning), so the data axis absorbs the
     loss: data' = floor(n_healthy / model_shards). If fewer than one data
-    replica remains, fall back to halving model shards (re-partition event).
+    replica remains, fall back to halving model shards — a re-partition
+    event, which also invalidates every cached halo plan (DESIGN.md §8):
+    the k of the node→CE partition changed, so the boundary relocation is
+    stale. The next `repro.dist.halo.get_halo_plan` performs the full
+    replan (an incremental boundary-delta replan can slot in behind the
+    same cache API later).
     """
     if n_healthy < 1:
         raise ValueError("no healthy devices")
     m = model_shards
     while m > 1 and n_healthy < m:
         m //= 2
+    if m != model_shards:
+        from repro.dist.halo import invalidate_halo_plans
+
+        invalidate_halo_plans()
     d = max(n_healthy // m, 1)
     return MeshPlan(shape=(d, m), axes=axes)
 

@@ -173,6 +173,106 @@ def test_wire_volume_helpers_match_invariant():
     assert plan.wire_fraction() < 1.0
 
 
+# --------------------------------------------------------------- plan cache
+def test_plan_cache_same_graph_reuses_object():
+    from repro.dist import halo
+
+    halo.invalidate_halo_plans()
+    g = citation_like(120, 700, seed=7)
+    part = partition_graph(120, g.edge_index, 4, method="bfs", seed=0)
+    before = halo.plan_cache_stats()
+    p1 = halo.get_halo_plan(part, g.edge_index)
+    p2 = halo.get_halo_plan(part, g.edge_index)
+    assert p1 is p2                              # same graph/partition/k → same object
+    after = halo.plan_cache_stats()
+    assert after["misses"] - before["misses"] == 1
+    assert after["hits"] - before["hits"] == 1
+
+
+def test_plan_cache_mutated_graph_or_k_rebuilds():
+    from repro.dist import halo
+
+    halo.invalidate_halo_plans()
+    g = citation_like(120, 700, seed=7)
+    part4 = partition_graph(120, g.edge_index, 4, method="bfs", seed=0)
+    p1 = halo.get_halo_plan(part4, g.edge_index)
+    # Different k → different cache entry.
+    part8 = partition_graph(120, g.edge_index, 8, method="bfs", seed=0)
+    p8 = halo.get_halo_plan(part8, g.edge_index)
+    assert p8 is not p1 and p8.k == 8
+    # Mutated edge list → different fingerprint → rebuild.
+    ei2 = g.edge_index.copy()
+    ei2[1, 0] = (ei2[1, 0] + 1) % 120
+    part_m = partition_graph(120, ei2, 4, method="bfs", seed=0)
+    pm = halo.get_halo_plan(part_m, ei2)
+    assert pm is not p1
+    # Same graph, different partition (seed) → no collision either.
+    part_s = partition_graph(120, g.edge_index, 4, method="random", seed=3)
+    ps = halo.get_halo_plan(part_s, g.edge_index)
+    assert ps is not p1
+    assert halo.plan_cache_stats()["size"] >= 4
+    evicted = halo.invalidate_halo_plans()
+    assert evicted >= 4
+    assert halo.get_halo_plan(part4, g.edge_index) is not p1   # rebuilt
+
+
+def test_plan_cache_lazy_builder_runs_once():
+    from repro.dist.halo import cached_halo_plan, invalidate_halo_plans
+
+    invalidate_halo_plans()
+    calls = []
+
+    def build():
+        calls.append(1)
+        g = citation_like(64, 300, seed=1)
+        part = partition_graph(64, g.edge_index, 2, method="block")
+        from repro.dist.halo import build_halo_plan
+
+        return build_halo_plan(part, g.edge_index)
+
+    p1 = cached_halo_plan("unit:lazy", 2, builder=build)
+    p2 = cached_halo_plan("unit:lazy", 2, builder=build)
+    assert p1 is p2 and len(calls) == 1
+    # Axis is part of the key (hierarchical meshes cache per axis).
+    p3 = cached_halo_plan("unit:lazy", 2, "pod", builder=build)
+    assert p3 is not p1 and len(calls) == 2
+
+
+def test_plan_cache_elastic_resize_invalidates():
+    from repro.dist import halo
+    from repro.train.elastic import elastic_replan
+
+    halo.invalidate_halo_plans()
+    g = citation_like(100, 500, seed=2)
+    part = partition_graph(100, g.edge_index, 8, method="bfs", seed=0)
+    p1 = halo.get_halo_plan(part, g.edge_index)
+    # Data-axis-only shrink keeps the model degree → plans stay valid.
+    keep = elastic_replan(32, 8)
+    assert keep.shape == (4, 8)
+    assert halo.get_halo_plan(part, g.edge_index) is p1
+    # Model-degree change = re-partition event → full invalidation.
+    shrink = elastic_replan(4, 8)
+    assert shrink.shape[1] == 4
+    assert halo.get_halo_plan(part, g.edge_index) is not p1
+
+
+def test_relocate_restore_roundtrip_and_node_mask():
+    from repro.dist.halo import get_halo_plan, node_mask, relocate_node_array, restore_node_array
+
+    g = citation_like(90, 400, seed=11)
+    part = partition_graph(90, g.edge_index, 4, method="bfs", seed=1)
+    plan = get_halo_plan(part, g.edge_index)
+    x = np.random.default_rng(0).standard_normal((90, 5)).astype(np.float32)
+    blocks = relocate_node_array(plan, x)
+    assert blocks.shape == (4, plan.n_local, 5)
+    np.testing.assert_array_equal(restore_node_array(plan, blocks), x)
+    mask = node_mask(plan)
+    assert mask.shape == (4, plan.n_local)
+    assert int(mask.sum()) == 90
+    # Padding rows are zero in the blocked layout.
+    assert np.all(blocks[mask == 0] == 0)
+
+
 # -------------------------------------------------------------------- policy
 def test_policy_constrain_noop_and_named():
     from repro.dist.policy import NO_POLICY, ShardingPolicy
@@ -188,3 +288,19 @@ def test_policy_constrain_noop_and_named():
     assert pol.sharding("h").mesh is not None
     pol2 = pol.with_specs(h=P(None, "model"))
     assert pol2.spec("h") == P(None, "model") and pol.spec("h") == P("model", None)
+
+
+def test_policy_comm_mode_and_neighbor_table():
+    from repro.dist.policy import NO_POLICY, ShardingPolicy
+
+    x = jnp.arange(12.0).reshape(6, 2)
+    # Broadcast / NO_POLICY: the table is the identity.
+    assert NO_POLICY.neighbor_table(x) is x
+    halo_pol = ShardingPolicy(comm="halo")
+    # Unbound halo (outside shard_map) is inert too.
+    assert not halo_pol.is_halo
+    assert halo_pol.neighbor_table(x) is x
+    bound = halo_pol.bind_halo(jnp.asarray([0, 3], jnp.int32))
+    assert bound.is_halo and not halo_pol.is_halo       # bind returns a copy
+    # with_specs preserves the comm mode.
+    assert halo_pol.with_specs(h=P("model", None)).comm == "halo"

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Docs reference check: README.md / DESIGN.md must cite only real files.
+
+Scans the two architecture docs for file-like tokens (anything ending in a
+code extension) and fails if a referenced file cannot be found in the repo.
+Bare names and package-relative paths are resolved against a small set of
+candidate roots (repo root, src/repro, benchmarks, examples, tests, tools),
+matching how the docs abbreviate paths (`train/elastic.py` ==
+`src/repro/train/elastic.py`). Paths under generated directories
+(results/) are exempt: they legitimately do not exist in a fresh checkout.
+
+    python tools/check_docs_refs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = ("README.md", "DESIGN.md")
+GENERATED = ("results/",)
+CANDIDATE_ROOTS = ("", "src/repro", "benchmarks", "examples", "tests", "tools")
+TOKEN = re.compile(r"[\w.\-/]+\.(?:py|md|yml|yaml|toml|txt|json)\b")
+
+
+def resolves(token: str) -> bool:
+    while token.startswith("./"):
+        token = token[2:]
+    for root in CANDIDATE_ROOTS:
+        if (ROOT / root / token).exists():
+            return True
+    return False
+
+
+def main() -> int:
+    missing: list[tuple[str, str]] = []
+    for doc in DOCS:
+        text = (ROOT / doc).read_text(encoding="utf-8")
+        for tok in sorted({m.group(0) for m in TOKEN.finditer(text)}):
+            if tok.startswith(GENERATED):
+                continue
+            if not resolves(tok):
+                missing.append((doc, tok))
+    if missing:
+        for doc, tok in missing:
+            print(f"MISSING: {doc} references {tok!r} which does not exist")
+        return 1
+    print(f"docs refs OK ({', '.join(DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
