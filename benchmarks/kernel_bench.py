@@ -52,3 +52,33 @@ def kernel_rows():
     err = float(jnp.abs(out_k - out_r).max())
     rows.append(("kernel/flash_attention_interp", us_k, f"ref_us={us_r:.0f} err={err:.1e}"))
     return rows
+
+
+def spmm_compare_rows(full: bool = False):
+    """`bsr_spmm` vs the segment-sum system path at increasing scale — the
+    ROADMAP's kernel-perf entry. On CPU the Pallas kernel runs in interpret
+    mode, so these rows track correctness plumbing and the segment-sum
+    baseline; native-TPU numbers come from the same rows on real hardware.
+    ``--full`` adds an ogbn-products-density point (~25 edges/node)."""
+    rng = np.random.default_rng(0)
+    rows = []
+    scales = [(2048, 32768, 64)]
+    if full:
+        scales.append((8192, 204_800, 100))   # products density at 1/300 nodes
+    for n, e, f in scales:
+        ei = rng.integers(0, n, size=(2, e)).astype(np.int32)
+        ba = blocked_adjacency(n, ei, block=128)
+        vals, cols = jnp.asarray(ba.block_vals), jnp.asarray(ba.block_cols)
+        z = jnp.asarray(rng.standard_normal((ba.n_padded, f)), jnp.float32)
+        zn = z[:n]
+        s, d = jnp.asarray(ei[0]), jnp.asarray(ei[1])
+        out_b, us_b = timed(lambda: jax.block_until_ready(bsr_spmm(vals, cols, z)), repeat=2)
+        out_s, us_s = timed(lambda: jax.block_until_ready(aggregate(zn, s, d, n)), repeat=2)
+        err = float(jnp.abs(out_b[:n] - out_s).max())
+        gb = ba.block_vals.nbytes / 1e9
+        rows.append((
+            f"kernel/bsr_vs_segsum_n{n}", us_b,
+            f"segsum_us={us_s:.0f} err={err:.1e} blocks={ba.block_vals.shape[0]*ba.block_vals.shape[1]}"
+            f" bsr_gb={gb:.2f} density={ba.density:.3f}",
+        ))
+    return rows

@@ -18,7 +18,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks.fig07_quant import fig07_quant_accuracy
-    from benchmarks.kernel_bench import kernel_rows
+    from benchmarks.kernel_bench import kernel_rows, spmm_compare_rows
+    from benchmarks.serve_bench import serve_rows
     from benchmarks.paper_figs import (
         fig01_baseline_comm,
         fig09_mesh_sweep,
@@ -49,6 +50,8 @@ def main(argv=None) -> None:
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),
+        ("spmm", lambda: spmm_compare_rows(full=args.full)),
+        ("serve", serve_rows),
         ("fig07", lambda: fig07_quant_accuracy(
             datasets=("cora", "citeseer", "pubmed") if args.full else ("cora",),
             epochs=120,

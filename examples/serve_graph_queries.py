@@ -1,0 +1,54 @@
+"""Online GCN query serving demo (DESIGN.md §9).
+
+Builds a citation-like graph, starts a `repro.serve.graph.GraphBatcher` with
+the hot-neighbor cache, and serves a hub-heavy query stream in arrival
+waves — mixed live sizes per micro-batch, one compiled forward throughout.
+Prints the latency percentiles and the cache accounting, then demonstrates
+invalidation: a weight update flushes the cache and the next wave re-warms it.
+
+    PYTHONPATH=src python examples/serve_graph_queries.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.serve import build_graph_engine
+from repro.models.gcn import gcn_init
+from repro.serve.graph import hot_query_stream
+
+
+def main() -> None:
+    spec = get_arch("coin_gcn")
+    engine, graph = build_graph_engine(spec, cache_capacity=256, n_parts=4, seed=0)
+
+    for wave, size in enumerate((16, 7, 16, 3, 16)):     # mixed arrival sizes
+        for v in hot_query_stream(graph, size, seed=wave):
+            engine.submit(int(v))
+        engine.run_until_drained()
+        c = engine.cache.stats()
+        print(f"wave {wave}: {size:3d} queries  hit-rate {c['hit_rate']:.1%}  "
+              f"resident {c['resident']}/{c['capacity']}")
+
+    s = engine.stats()
+    print(f"\nserved {s['queries']} queries in {s['micro_batches']} micro-batches, "
+          f"{s['traces']} trace (compile-once)")
+    print(f"latency p50={s['p50_ms']:.2f} ms p99={s['p99_ms']:.2f} ms | "
+          f"{s['nodes_per_query']:.1f} nodes/q {s['edges_per_query']:.1f} edges/q")
+    c = s["cache"]
+    print(f"hot-neighbor cache: {c['hits']} hits / {c['misses']} misses, "
+          f"rows saved {c['rows_saved']}, bytes saved {c['bytes_saved']/1e3:.1f} kB")
+
+    # A weight push invalidates every cached activation (they are pure
+    # functions of params+features), then the next wave re-warms.
+    engine.update_params(gcn_init(jax.random.PRNGKey(42), engine.cfg))
+    print(f"\nweight update → cache flushed (resident {len(engine.cache)}), "
+          f"invalidations={engine.cache.invalidations}")
+    for v in hot_query_stream(graph, 16, seed=99):
+        engine.submit(int(v))
+    engine.run_until_drained()
+    print(f"post-update wave: resident {len(engine.cache)}, "
+          f"traces still {engine.stats()['traces']} (no retrace)")
+
+
+if __name__ == "__main__":
+    main()

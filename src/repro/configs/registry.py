@@ -130,6 +130,11 @@ _MODULES = {
 
 def get_arch(arch_id: str) -> ArchSpec:
     if arch_id not in _MODULES:
-        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+        # Accept the hyphenated spelling of underscore ids (coin-gcn == coin_gcn).
+        alias = arch_id.replace("-", "_")
+        if alias in _MODULES:
+            arch_id = alias
+        else:
+            raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
     mod = importlib.import_module(_MODULES[arch_id])
     return mod.SPEC

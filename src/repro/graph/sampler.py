@@ -67,6 +67,11 @@ class NeighborSampler:
 
     def sample(self, seeds: np.ndarray) -> SampledBlock:
         seeds = np.asarray(seeds, dtype=np.int64)
+        if np.unique(seeds).shape[0] != seeds.shape[0]:
+            # The relabeling contract puts each seed in its own leading row;
+            # duplicate seeds would leave all but one of their rows with no
+            # in-edges (silent zero aggregation), so reject them outright.
+            raise ValueError("NeighborSampler.sample: duplicate seed nodes")
         max_nodes, max_edges = self.max_shapes(len(seeds))
         all_src: list[np.ndarray] = []
         all_dst: list[np.ndarray] = []
@@ -74,10 +79,16 @@ class NeighborSampler:
         for f in self.fanout:
             deg = self._indptr[frontier + 1] - self._indptr[frontier]
             has = deg > 0
-            # Uniform with replacement among each node's in-neighbors.
+            # Uniform with replacement among each node's in-neighbors — this
+            # also covers fanout > degree (repeats instead of rejection
+            # loops, keeping shapes static).
             pick = (self._rng.random((frontier.shape[0], f)) * np.maximum(deg, 1)[:, None]).astype(np.int64)
-            idx = self._indptr[frontier][:, None] + pick
-            src = self._nbr[np.minimum(idx, self._indptr[-1] - 1)]
+            if self._nbr.size:
+                idx = self._indptr[frontier][:, None] + pick
+                src = self._nbr[np.minimum(idx, self._nbr.size - 1)]
+            else:
+                # Edgeless graph: every node is isolated; all self-messages.
+                src = np.broadcast_to(frontier[:, None], (frontier.shape[0], f)).copy()
             src = np.where(has[:, None], src, frontier[:, None])  # isolated: self-message
             dst = np.repeat(frontier, f)
             all_src.append(src.reshape(-1))

@@ -1,7 +1,9 @@
-"""Serving driver: batched decode for LM archs / batched scoring for DeepFM.
+"""Serving driver: batched decode for LM archs, batched scoring for DeepFM,
+and online GCN node-query serving with the hot-neighbor cache (DESIGN.md §9).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --tokens 32
     PYTHONPATH=src python -m repro.launch.serve --arch deepfm --requests 4
+    PYTHONPATH=src python -m repro.launch.serve --arch coin-gcn --queries 64
 """
 from __future__ import annotations
 
@@ -49,17 +51,131 @@ def serve_recsys(spec, requests: int, batch: int = 512) -> None:
     print(f"deepfm: batch={batch} p50≈{dt*1e3:.2f} ms ({batch/dt:.0f} examples/s)")
 
 
+def build_graph_engine(
+    spec,
+    batch_seeds: int = 8,
+    fanout: int = 4,
+    cache_capacity: int = 256,
+    n_parts: int = 0,
+    seed: int = 0,
+    n_nodes: int = 2000,
+    n_edges: int = 12000,
+):
+    """A small serving engine for a GNN arch on a citation-like graph.
+
+    Returns (engine, graph). Shared by the CLI, the example, and the serve
+    benchmark so they exercise one code path.
+    """
+    from repro.core.partition import partition_graph
+    from repro.graph.generators import citation_like
+    from repro.serve.graph import GraphBatcher
+
+    cfg = spec.make_reduced()
+    part = None
+    if spec.arch_id == "coin_gcn":
+        from repro.models.gcn import gcn_init
+
+        d_in, n_out = cfg.layer_dims[0], cfg.layer_dims[-1]
+        graph = citation_like(n_nodes, n_edges, d_in, n_out, seed=seed)
+        params = gcn_init(jax.random.PRNGKey(seed), cfg)
+        model = "gcn"
+    elif spec.arch_id == "pna":
+        from repro.models.pna import pna_init
+
+        graph = citation_like(n_nodes, n_edges, cfg.d_in, 4, seed=seed)
+        params = pna_init(jax.random.PRNGKey(seed), cfg)
+        model = "pna"
+    elif spec.arch_id == "egnn":
+        from repro.models.egnn import egnn_init
+
+        graph = citation_like(n_nodes, n_edges, cfg.d_in, 4, seed=seed, with_positions=True)
+        params = egnn_init(jax.random.PRNGKey(seed), cfg)
+        model = "egnn"
+    else:
+        raise SystemExit(f"{spec.arch_id}: graph serving supports coin_gcn/pna/egnn")
+    if n_parts:
+        part = partition_graph(graph.n_nodes, graph.edge_index, n_parts, method="bfs",
+                               seed=seed, refine=True)
+    engine = GraphBatcher(
+        params, graph, cfg,
+        model=model, batch_seeds=batch_seeds, fanout=fanout,
+        # Activation injection (the cache's truncation hook) exists only in
+        # the GCN serve forward; other archs serve cache-off.
+        cache_capacity=cache_capacity if model == "gcn" else 0,
+        partition=part, seed=seed,
+    )
+    return engine, graph
+
+
+def serve_graph(
+    spec,
+    n_queries: int,
+    batch_seeds: int = 8,
+    fanout: int = 4,
+    cache_capacity: int = 256,
+    n_parts: int = 4,
+    seed: int = 0,
+) -> None:
+    """Serve ``n_queries`` node-classification queries (degree-weighted, so
+    hub neighborhoods are hot — the COIN access pattern) and report latency
+    plus hot-neighbor-cache accounting."""
+    from repro.serve.graph import hot_query_stream
+
+    engine, graph = build_graph_engine(
+        spec, batch_seeds=batch_seeds, fanout=fanout,
+        cache_capacity=cache_capacity, n_parts=n_parts, seed=seed,
+    )
+    nodes = hot_query_stream(graph, n_queries, seed=seed + 1)
+    t0 = time.perf_counter()
+    for v in nodes:
+        engine.submit(int(v))
+    engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    s = engine.stats()
+    print(
+        f"{spec.arch_id}: {s['queries']} queries in {s['micro_batches']} micro-batches "
+        f"({s['traces']} trace) in {dt*1e3:.1f} ms ({s['queries']/dt:.0f} q/s)"
+    )
+    print(
+        f"  latency p50={s['p50_ms']:.2f} ms p99={s['p99_ms']:.2f} ms | "
+        f"sampled {s['nodes_per_query']:.1f} nodes/q {s['edges_per_query']:.1f} edges/q"
+        + (f" | foreign rows {s['foreign_rows']}" if n_parts else "")
+    )
+    if "cache" in s:
+        c = s["cache"]
+        print(
+            f"  hot-neighbor cache: hit-rate {c['hit_rate']:.1%} "
+            f"({c['hits']} hits / {c['misses']} misses), resident {c['resident']}/"
+            f"{c['capacity']}, evictions {c['evictions']}, "
+            f"rows saved {c['rows_saved']}, bytes saved {c['bytes_saved']/1e3:.1f} kB"
+        )
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {', '.join(ALL_ARCHS)} (hyphen/underscore both fine)")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=64, help="graph node queries to serve")
+    ap.add_argument("--batch-seeds", type=int, default=8)
+    ap.add_argument("--fanout", type=int, default=4)
+    ap.add_argument("--cache-capacity", type=int, default=256)
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--parts", type=int, default=4, help="partition-aligned packing parts")
     args = ap.parse_args(argv)
     spec = get_arch(args.arch)
     if spec.family == "lm":
         serve_lm(spec, args.tokens)
     elif spec.family == "recsys":
         serve_recsys(spec, args.requests)
+    elif spec.family == "gnn":
+        serve_graph(
+            spec, args.queries,
+            batch_seeds=args.batch_seeds, fanout=args.fanout,
+            cache_capacity=0 if args.no_cache else args.cache_capacity,
+            n_parts=args.parts,
+        )
     else:
         raise SystemExit(f"{args.arch} is a training architecture; use repro.launch.train")
 

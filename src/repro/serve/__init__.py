@@ -1,5 +1,21 @@
-"""Serving substrate: continuous-batching scheduler over the KV cache."""
+"""Serving substrate: continuous-batching LM scheduler over the KV cache,
+and online GCN query serving with the hot-neighbor cache (DESIGN.md §9)."""
 
 from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve.graph import (
+    GraphBatcher,
+    GraphQuery,
+    HotNeighborCache,
+    ServeBlock,
+    ServeSampler,
+)
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = [
+    "ContinuousBatcher",
+    "Request",
+    "GraphBatcher",
+    "GraphQuery",
+    "HotNeighborCache",
+    "ServeBlock",
+    "ServeSampler",
+]

@@ -126,7 +126,9 @@ class ContinuousBatcher:
         return sum(r is not None for r in self.slot_req)
 
     def step(self) -> None:
-        """One engine iteration: admit → decode all slots → sample/retire."""
+        """One engine iteration: admit → decode all slots → sample/retire →
+        re-admit (a slot retired this step is refilled before the step ends,
+        so the next decode runs at full occupancy)."""
         self._admit()
         if self.active == 0:
             return
@@ -137,6 +139,7 @@ class ContinuousBatcher:
         self.steps_run += 1
         logits = np.asarray(logits)
         sampled = self.sampler(logits)
+        retired = False
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -150,16 +153,24 @@ class ContinuousBatcher:
                 tok = int(sampled[slot])
                 req.generated.append(tok)
                 self.next_token[slot] = tok
+                # Retire on budget, EOS (including one emitted on the very
+                # first decode step), or cache exhaustion. The cache bound is
+                # `pos + 2 > max_len`: the next decode would write position
+                # pos+1, and pos+1 == max_len−1 is still a legal row — the
+                # old `>=` retired such a request one token early.
                 if (
                     len(req.generated) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
-                    or pos + 2 >= self.max_len
+                    or pos + 2 > self.max_len
                 ):
                     req.done = True
                     self.finished.append(req)
                     self.slot_req[slot] = None
+                    retired = True
                     continue
             self.positions[slot] = pos + 1
+        if retired and self.pending:
+            self._admit()
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):

@@ -93,6 +93,49 @@ def test_continuous_batcher_matches_sequential_decode():
         assert by_rid[i] == ref, (i, by_rid[i], ref)
 
 
+def test_batcher_eos_first_decode_step_retires_and_readmits():
+    """A request whose very first decode step emits EOS must retire in that
+    same step(), and the freed slot must be refilled from the pending queue
+    within the same step() (not one engine iteration later)."""
+    from repro.serve.scheduler import ContinuousBatcher, Request
+
+    cfg, params = _tiny_lm()
+
+    # Discover the token greedy decode emits first for this prompt.
+    probe = ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    probe.submit(Request(rid=0, prompt=np.asarray([7], np.int32), max_new_tokens=2))
+    probe.run_until_drained()
+    eos = probe.finished[0].generated[0]
+
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    cb.submit(Request(rid=0, prompt=np.asarray([7], np.int32), max_new_tokens=4, eos_id=eos))
+    cb.submit(Request(rid=1, prompt=np.asarray([1, 2], np.int32), max_new_tokens=2))
+    cb.step()  # first decode step emits EOS
+    assert [r.rid for r in cb.finished] == [0]
+    assert cb.finished[0].generated == [eos]
+    assert cb.active == 1, "freed slot must be re-admitted in the same step()"
+    assert cb.slot_req[0].rid == 1 and not cb.pending
+    cb.run_until_drained()
+    assert len(cb.finished) == 2 and len(cb.finished[1].generated) == 2
+
+    # Multi-token prompt variant: EOS on the first post-prefill step.
+    cb2 = ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    cb2.submit(Request(rid=0, prompt=np.asarray([3, 7], np.int32), max_new_tokens=4, eos_id=None))
+    cb2.step()
+    first = None
+    while cb2.active and first is None:
+        cb2.step()
+        if cb2.finished or (cb2.slot_req[0] and cb2.slot_req[0].generated):
+            first = (cb2.finished or [cb2.slot_req[0]])[0].generated[0]
+    cb3 = ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    cb3.submit(Request(rid=0, prompt=np.asarray([3, 7], np.int32), max_new_tokens=4, eos_id=first))
+    cb3.step()  # prefill
+    assert not cb3.finished
+    cb3.step()  # first decode step → EOS → retire
+    assert [r.rid for r in cb3.finished] == [0]
+    assert cb3.finished[0].generated == [first]
+
+
 def test_batcher_slot_turnover_and_capacity():
     from repro.serve.scheduler import ContinuousBatcher, Request
 

@@ -14,7 +14,7 @@ from repro.graph.ops import (
     sym_norm_edge_weights,
 )
 from repro.graph.sampler import NeighborSampler
-from repro.graph.structure import blocked_adjacency, to_padded
+from repro.graph.structure import GraphData, blocked_adjacency, to_padded
 
 
 @settings(max_examples=20, deadline=None)
@@ -110,6 +110,52 @@ def test_sampler_shapes_and_membership():
     edge_set = set(map(tuple, g.edge_index.T.tolist()))
     for a, b in zip(gids_s[:300], gids_d[:300]):
         assert (a, b) in edge_set or a == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 80),
+    e=st.integers(0, 300),
+    fan=st.integers(1, 9),
+    seed=st.integers(0, 50),
+)
+def test_sampler_zero_degree_and_overfanout_property(n, e, fan, seed):
+    """Zero-in-degree seeds, edgeless graphs, and fanout > degree must all
+    produce ghost-padded blocks without relabeling corruption."""
+    r = np.random.default_rng(seed)
+    ei = r.integers(0, n, size=(2, e)).astype(np.int32) if e else np.zeros((2, 0), np.int32)
+    g = GraphData(n_nodes=n, edge_index=ei)
+    samp = NeighborSampler(g, fanout=(fan, fan), seed=seed)
+    n_seeds = min(4, n)
+    seeds = r.choice(n, size=n_seeds, replace=False)
+    blk = samp.sample(seeds)
+    # Seeds occupy the leading rows, in order.
+    np.testing.assert_array_equal(blk.node_ids[:n_seeds], seeds)
+    # The valid node prefix is unique and in range; padding is the ghost id.
+    valid = blk.node_ids[: blk.n_nodes]
+    assert np.unique(valid).shape[0] == blk.n_nodes and valid.max() < n
+    assert np.all(blk.node_ids[blk.n_nodes:] == n)
+    # Local edge endpoints stay inside the valid prefix; pads point at the
+    # ghost row (max_nodes) so a padded gather reads the appended zero row.
+    assert blk.n_edges == 0 or blk.senders[: blk.n_edges].max() < blk.n_nodes
+    assert blk.n_edges == 0 or blk.receivers[: blk.n_edges].max() < blk.n_nodes
+    assert np.all(blk.senders[blk.n_edges:] == blk.max_nodes)
+    assert np.all(blk.receivers[blk.n_edges:] == blk.max_nodes)
+    # Every materialized edge is a real graph edge or an isolated-node
+    # self-message (the zero-in-degree escape).
+    edge_set = set(map(tuple, ei.T.tolist()))
+    gs = blk.node_ids[blk.senders[: blk.n_edges]]
+    gd = blk.node_ids[blk.receivers[: blk.n_edges]]
+    deg_in = np.bincount(ei[1], minlength=n)
+    for a, b in zip(gs.tolist(), gd.tolist()):
+        assert (a, b) in edge_set or (a == b and deg_in[b] == 0)
+
+
+def test_sampler_rejects_duplicate_seeds():
+    g = citation_like(100, 500, seed=0)
+    samp = NeighborSampler(g, fanout=(3,), seed=0)
+    with pytest.raises(ValueError):
+        samp.sample(np.asarray([5, 5, 9]))
 
 
 def test_generators_exact_counts():

@@ -1,0 +1,215 @@
+"""repro.serve.graph: online GCN query serving + hot-neighbor cache.
+
+Pins the subsystem's three contracts (ISSUE 3 acceptance):
+  * compile-once — ONE trace serves micro-batches of different live sizes,
+  * cache-on == cache-off logits (fp32 tolerance) with strictly fewer
+    sampled nodes+edges per query,
+  * degree-ranked eviction under a tiny capacity, and invalidation on
+    weight/feature updates.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.partition import partition_graph
+from repro.graph.generators import citation_like
+from repro.models.gcn import GCNConfig, gcn_init
+from repro.serve.graph import (
+    GraphBatcher,
+    HotNeighborCache,
+    ServeSampler,
+    hot_query_stream,
+)
+
+
+def _setup(seed=0, n=300, e=2400, f=16, c=4, hidden=8, dims=None):
+    g = citation_like(n, e, f, c, seed=seed)
+    cfg = GCNConfig(layer_dims=dims or (f, hidden, c))
+    params = gcn_init(jax.random.PRNGKey(seed), cfg)
+    return g, cfg, params
+
+
+# ------------------------------------------------------------------- sampler
+def test_serve_sampler_deterministic_and_pure():
+    g, _, _ = _setup()
+    s1 = ServeSampler(g, fanout=4, n_layers=2, seed=7)
+    s2 = ServeSampler(g, fanout=4, n_layers=2, seed=7)
+    nodes = np.arange(50)
+    np.testing.assert_array_equal(s1.neighbors(nodes), s2.neighbors(nodes))
+    # Purity: a node's draw does not depend on which batch it appears in.
+    np.testing.assert_array_equal(
+        s1.neighbors(np.asarray([3])), s1.neighbors(np.asarray([9, 3, 40]))[1:2]
+    )
+    # A different seed gives a different sampled graph.
+    s3 = ServeSampler(g, fanout=4, n_layers=2, seed=8)
+    assert not np.array_equal(s1.neighbors(nodes), s3.neighbors(nodes))
+
+
+def test_serve_sampler_block_replay_identical():
+    g, _, _ = _setup()
+    s = ServeSampler(g.with_self_loops(), fanout=3, n_layers=2, seed=0)
+    seeds = np.asarray([5, 17, 100])
+    a = s.sample_block(seeds, batch_seeds=4)
+    b = s.sample_block(seeds, batch_seeds=4)
+    np.testing.assert_array_equal(a.node_ids, b.node_ids)
+    np.testing.assert_array_equal(a.senders, b.senders)
+    np.testing.assert_array_equal(a.receivers, b.receivers)
+    np.testing.assert_allclose(a.edge_weight, b.edge_weight)
+    # Ghost-padding hygiene: pads are inert (weight 0, ids out of valid range).
+    assert np.all(a.node_ids[a.n_nodes:] == -1)
+    assert np.all(a.senders[a.n_edges:] == a.max_nodes)
+    assert np.all(a.edge_weight[a.n_edges:] == 0.0)
+    assert a.senders[: a.n_edges].max() < a.n_nodes
+
+
+# -------------------------------------------------------------- compile once
+def test_compile_once_across_live_sizes():
+    g, cfg, params = _setup()
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=3, seed=0)
+    for wave in ([1, 2, 3, 4], [5, 6], [7]):       # live sizes 4, 2, 1
+        for v in wave:
+            eng.submit(v)
+        eng.step()
+    assert eng.micro_batches == 3
+    assert eng.traces == 1, "fixed-shape micro-batches must not retrace"
+    assert all(q.logits is not None for q in eng.finished)
+
+
+# ------------------------------------------------------- cache == no cache
+def _serve_two_waves(g, cfg, params, nodes, capacity):
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=4,
+                       cache_capacity=capacity, seed=0)
+    for wave in (nodes, nodes):                    # second wave replays hot set
+        for v in wave:
+            eng.submit(int(v))
+        eng.run_until_drained()
+    return eng
+
+
+def test_cache_on_matches_cache_off_with_fewer_samples():
+    g, cfg, params = _setup()
+    nodes = hot_query_stream(g, 40)
+    off = _serve_two_waves(g, cfg, params, nodes, capacity=0)
+    on = _serve_two_waves(g, cfg, params, nodes, capacity=64)
+    lo = {q.qid: q.logits for q in off.finished}
+    ln = {q.qid: q.logits for q in on.finished}
+    assert set(lo) == set(ln)
+    for k in lo:
+        np.testing.assert_allclose(ln[k], lo[k], rtol=1e-5, atol=1e-5)
+    assert on.cache.hits > 0
+    assert (on.nodes_sampled + on.edges_sampled) < (off.nodes_sampled + off.edges_sampled)
+    s = on.stats()["cache"]
+    assert s["rows_saved"] > 0 and s["bytes_saved"] > 0
+
+
+def test_cache_exactness_three_layer_gcn():
+    """Deep-GCN regression: every edge runs at every layer in the merged
+    forward, so requirements must propagate as (node, layer) pairs — a
+    truncated hub's non-injected layers must never leak into a read value
+    (they did under naive depth-BFS truncation, e.g. via self-loops)."""
+    g, cfg, params = _setup(dims=(16, 8, 8, 4))          # 3 layers
+    nodes = hot_query_stream(g, 40)
+    off = _serve_two_waves(g, cfg, params, nodes, capacity=0)
+    on = _serve_two_waves(g, cfg, params, nodes, capacity=64)
+    assert on.cache.hits > 0
+    lo = {q.qid: q.logits for q in off.finished}
+    for q in on.finished:
+        np.testing.assert_allclose(q.logits, lo[q.qid], rtol=1e-5, atol=1e-5)
+    assert (on.nodes_sampled + on.edges_sampled) < (off.nodes_sampled + off.edges_sampled)
+
+
+def test_eviction_under_tiny_capacity():
+    g, cfg, params = _setup()
+    nodes = hot_query_stream(g, 48)
+    on = _serve_two_waves(g, cfg, params, nodes, capacity=2)
+    assert len(on.cache) <= 2
+    assert on.cache.evictions > 0
+    # Correctness must survive eviction churn.
+    off = _serve_two_waves(g, cfg, params, nodes, capacity=0)
+    for qo, qn in zip(off.finished, on.finished):
+        np.testing.assert_allclose(qn.logits, qo.logits, rtol=1e-5, atol=1e-5)
+
+
+def test_degree_ranked_admission():
+    deg = np.asarray([10, 1, 5, 7])
+    c = HotNeighborCache(capacity=2, degree=deg)
+    v = np.ones(4, np.float32)
+    assert c.admit(1, 1, v)            # deg 1
+    assert c.admit(2, 1, v)            # deg 5 → full
+    assert c.admit(0, 1, v)            # deg 10 evicts deg 1
+    assert c.lookup(1, 1) is None and c.lookup(0, 1) is not None
+    assert not c.admit(1, 1, v)        # deg 1 cannot evict deg 5
+    assert c.evictions == 1
+
+
+# ------------------------------------------------------------- invalidation
+def test_cache_invalidated_on_weight_and_feature_update():
+    g, cfg, params = _setup()
+    nodes = hot_query_stream(g, 24)
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=4,
+                       cache_capacity=64, seed=0)
+    for v in nodes:
+        eng.submit(int(v))
+    eng.run_until_drained()
+    assert len(eng.cache) > 0
+    new_params = gcn_init(jax.random.PRNGKey(99), cfg)
+    eng.update_params(new_params)
+    assert len(eng.cache) == 0 and eng.cache.invalidations == 1
+    # Post-update logits must match a fresh engine on the new weights (no
+    # stale activation may leak through the cache).
+    for v in nodes:
+        eng.submit(int(v))
+    eng.run_until_drained()
+    ref = GraphBatcher(new_params, g, cfg, batch_seeds=4, fanout=4, seed=0)
+    for v in nodes:
+        ref.submit(int(v))
+    ref.run_until_drained()
+    for qa, qb in zip(eng.finished[len(nodes):], ref.finished):
+        np.testing.assert_allclose(qa.logits, qb.logits, rtol=1e-5, atol=1e-5)
+    eng.update_features(np.asarray(g.features))
+    assert eng.cache.invalidations == 2
+
+
+# ------------------------------------------------------- partition packing
+def test_partition_aligned_packing_groups_parts():
+    g, cfg, params = _setup()
+    part = partition_graph(g.n_nodes, g.edge_index, 2, method="block")
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=3,
+                       partition=part, seed=0)
+    # Interleave queries from the two halves; packing should un-interleave.
+    lo, hi = [1, 2, 3, 4], [290, 291, 292, 293]
+    for a, b in zip(lo, hi):
+        eng.submit(a)
+        eng.submit(b)
+    first = eng.step()
+    second = eng.step()
+    p_first = {int(part.assignment[q.node]) for q in first}
+    p_second = {int(part.assignment[q.node]) for q in second}
+    assert len(p_first) == 1 and len(p_second) == 1 and p_first != p_second
+
+
+# ------------------------------------------------------------ other models
+def test_pna_and_egnn_serve_smoke():
+    from repro.models.egnn import EGNNConfig, egnn_init
+    from repro.models.pna import PNAConfig, pna_init
+
+    g = citation_like(120, 900, 8, 3, seed=0, with_positions=True)
+    pcfg = PNAConfig(n_layers=2, d_hidden=12, d_in=8, d_out=3)
+    eng = GraphBatcher(pna_init(jax.random.PRNGKey(0), pcfg), g, pcfg,
+                       model="pna", batch_seeds=3, fanout=3, seed=0)
+    for v in (4, 9, 40, 80):
+        eng.submit(v)
+    eng.run_until_drained()
+    assert eng.traces == 1 and all(np.isfinite(q.logits).all() for q in eng.finished)
+
+    ecfg = EGNNConfig(n_layers=2, d_hidden=12, d_in=8, d_out=2)
+    eng = GraphBatcher(egnn_init(jax.random.PRNGKey(0), ecfg), g, ecfg,
+                       model="egnn", batch_seeds=3, fanout=3, seed=0)
+    for v in (4, 9, 40):
+        eng.submit(v)
+    eng.run_until_drained()
+    assert eng.traces == 1 and all(np.isfinite(q.logits).all() for q in eng.finished)
+
+    with pytest.raises(ValueError):
+        GraphBatcher(pna_init(jax.random.PRNGKey(0), pcfg), g, pcfg,
+                     model="pna", cache_capacity=8)
