@@ -140,6 +140,38 @@ def tbl3_comm_fraction():
     return rows
 
 
+def comm_tier_rows():
+    """Comm-tier accounting (docs/communication.md §5): per-device rows the
+    hierarchical (pod, model) halo schedule moves on each tier vs the flat
+    single-axis plan, on the pinned 2000-node/12000-edge BFS+refined case
+    (2 pods × 4 devices). Derived column reports intra/inter rows and the
+    inter-pod crossing cut — the acceptance inequality made a benchmark."""
+    from repro.core.partition import partition_graph
+    from repro.dist.halo import build_halo_plan
+    from repro.graph.generators import citation_like
+
+    g = citation_like(2000, 12000, seed=1)
+    part = partition_graph(2000, g.edge_index, 8, method="bfs", seed=0, refine=True)
+    (flat, hier), us = timed(
+        lambda: (
+            build_halo_plan(part, g.edge_index),
+            build_halo_plan(part, g.edge_index, axes=("pod", "model"), pods=2),
+        ),
+        repeat=1,
+    )
+    cut = hier.flat_inter_pod_rows_crossing / max(hier.inter_pod_rows_crossing, 1)
+    return [
+        (
+            "comm-tier/2x4", us,
+            f"flat_rows={flat.halo_rows_per_device} "
+            f"hier_intra={hier.intra_pod_rows_per_device} "
+            f"hier_inter={hier.inter_pod_rows_per_device} "
+            f"crossing_flat={hier.flat_inter_pod_rows_crossing} "
+            f"crossing_hier={hier.inter_pod_rows_crossing} cut={cut:.1f}x",
+        )
+    ]
+
+
 def halo_vs_broadcast():
     """Beyond-paper: halo exchange vs the paper's broadcast dataflow."""
     rows = []

@@ -21,6 +21,7 @@ def main(argv=None) -> None:
     from benchmarks.kernel_bench import kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
     from benchmarks.paper_figs import (
+        comm_tier_rows,
         fig01_baseline_comm,
         fig09_mesh_sweep,
         fig10_11_energy_vs_baseline,
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         ("fig13", fig13_edp),
         ("tbl3", tbl3_comm_fraction),
         ("halo", halo_vs_broadcast),
+        ("comm-tier", comm_tier_rows),
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),

@@ -15,7 +15,11 @@ serves every layer of every step.
     PYTHONPATH=src python examples/train_distributed_gcn.py [--steps 60]
 
 Runs on any device count (including 1, where the halo degenerates to an
-empty exchange).
+empty exchange). ``--pods 2`` switches to the hierarchical (pod, model)
+schedule (docs/communication.md): the mesh becomes 2-D, the plan splits
+each device's boundary set into intra-/inter-pod tiers, and the exchange
+runs in two phases — the printout shows how few rows cross the expensive
+inter-pod fabric vs the flat plan.
 """
 import argparse
 import sys
@@ -47,22 +51,37 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pods for the hierarchical (pod, model) halo schedule "
+                         "(must divide the device count; 1 = flat single-axis)")
     args = ap.parse_args()
 
     k = jax.device_count()
-    mesh = jax.make_mesh((k,), ("model",))
-    print(f"devices: {k} (mesh axis 'model')")
+    pods = args.pods
+    if pods < 1 or k % pods:
+        raise SystemExit(f"--pods {pods} must divide the device count {k}")
+    hier = pods > 1
+    if hier:
+        axes = ("pod", "model")
+        mesh = jax.make_mesh((pods, k // pods), axes)
+        print(f"devices: {k} (mesh {pods}×{k // pods}, axes {axes})")
+    else:
+        axes = ("model",)
+        mesh = jax.make_mesh((k,), axes)
+        print(f"devices: {k} (mesh axis 'model')")
 
     # ---- graph → partition → cached halo plan --------------------------------
     spec, g = make_dataset("cora", reduced=True)
     gs = g.symmetrized().with_self_loops()
     w = gs.sym_normalized_weights()
     part = partition_graph(gs.n_nodes, gs.edge_index, k, method="bfs", seed=0, refine=True)
-    plan = get_halo_plan(part, gs.edge_index, w)       # miss: builds the relocation
-    plan = get_halo_plan(part, gs.edge_index, w)       # hit: every reuse is free
+    pods_kw = {"pods": pods} if hier else {}
+    plan = get_halo_plan(part, gs.edge_index, w, **pods_kw)   # miss: builds the relocation
+    plan = get_halo_plan(part, gs.edge_index, w, **pods_kw)   # hit: every reuse is free
     print(
         f"graph: {spec.name} n={gs.n_nodes} e={gs.n_edges} → k={plan.k} "
-        f"n_local={plan.n_local} s_max={plan.s_max}"
+        f"n_local={plan.n_local} "
+        + (f"s_loc={plan.s_loc} s_rem={plan.s_rem}" if hier else f"s_max={plan.s_max}")
     )
     if plan.k > 1:
         print(
@@ -70,25 +89,42 @@ def main() -> None:
             f"broadcast {plan.broadcast_rows_per_device} rows "
             f"({plan.wire_fraction():.3f}× — DESIGN.md §8)"
         )
+    if hier:
+        print(
+            f"inter-pod crossing/device/layer: {plan.inter_pod_rows_crossing} rows "
+            f"hierarchical vs {plan.flat_inter_pod_rows_crossing} flat "
+            "(docs/communication.md)"
+        )
 
     # ---- blocked batch (static across steps: full-graph training) ------------
-    si, sl, rl, ew = plan.device_arrays()
+    if hier:
+        sloc, srem, sl, rl, ew = plan.device_arrays()
+        send = {"send_loc": sloc, "send_rem": srem}
+    else:
+        si, sl, rl, ew = plan.device_arrays()
+        send = {"send_idx": si}
     batch = {
         "feats": jnp.asarray(relocate_node_array(plan, g.features.astype(np.float32))),
         "labels": jnp.asarray(relocate_node_array(plan, g.labels.astype(np.int32))),
         "mask": jnp.asarray(node_mask(plan)),
-        "send_idx": si, "senders": sl, "receivers": rl, "edge_w": ew,
+        **send, "senders": sl, "receivers": rl, "edge_w": ew,
     }
     keys = sorted(batch)
+    spec_axes = axes if hier else "model"
 
     cfg = GCNConfig(layer_dims=(spec.n_features, spec.hidden, spec.n_labels))
     params = gcn_init(jax.random.PRNGKey(0), cfg)
-    policy = ShardingPolicy(comm="halo")
+    policy = ShardingPolicy(comm="halo", halo_axes=axes if hier else None)
+
+    def bind(b):
+        if hier:
+            return policy.bind_halo(send_loc=b["send_loc"], send_rem=b["send_rem"])
+        return policy.bind_halo(b["send_idx"])
 
     def loss_fn(params, batch):
         def body(*args):
             b = {kk: a[0] for kk, a in zip(keys, args)}
-            pol = policy.bind_halo(b["send_idx"])
+            pol = bind(b)
             logits = gcn_forward(
                 params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol
             ).astype(jnp.float32)
@@ -96,12 +132,14 @@ def main() -> None:
             gold = jnp.take_along_axis(logits, b["labels"][:, None], axis=-1)[:, 0]
             wsum = ((lse - gold) * b["mask"]).sum()
             wcnt = b["mask"].sum()
-            loss = jax.lax.psum(wsum, "model") / jnp.maximum(jax.lax.psum(wcnt, "model"), 1.0)
+            loss = jax.lax.psum(wsum, spec_axes) / jnp.maximum(
+                jax.lax.psum(wcnt, spec_axes), 1.0
+            )
             return loss[None]
 
         f = jax.shard_map(
             body, mesh=mesh,
-            in_specs=(P("model"),) * len(keys), out_specs=P("model"),
+            in_specs=(P(spec_axes),) * len(keys), out_specs=P(spec_axes),
             check_vma=False,
         )
         return f(*[batch[kk] for kk in keys]).mean()
@@ -120,14 +158,14 @@ def main() -> None:
     def fwd(batch):
         def body(*args):
             b = {kk: a[0] for kk, a in zip(keys, args)}
-            pol = policy.bind_halo(b["send_idx"])
+            pol = bind(b)
             return gcn_forward(
                 tr.params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol
             )[None]
 
         f = jax.shard_map(
             body, mesh=mesh,
-            in_specs=(P("model"),) * len(keys), out_specs=P("model"),
+            in_specs=(P(spec_axes),) * len(keys), out_specs=P(spec_axes),
             check_vma=False,
         )
         return f(*[batch[kk] for kk in keys])

@@ -13,10 +13,22 @@ This package makes that contract executable on a JAX mesh:
            padded send/edge tables, and the :func:`halo_exchange` /
            :func:`halo_aggregate` collectives (all_gather / ppermute inside
            shard_map) that ship only ``k·s_max`` halo rows per device instead
-           of the ``(k−1)·n_local`` rows of the broadcast schedule.
+           of the ``(k−1)·n_local`` rows of the broadcast schedule. On a
+           2-level ``(pod, model)`` mesh the plan turns hierarchical
+           (``axes=("pod", "model")``): :func:`hier_halo_exchange` /
+           :func:`hier_halo_aggregate` run a two-phase collective in which
+           only deduplicated remote-needed rows (``s_rem`` per device) cross
+           the expensive inter-pod tier (docs/communication.md).
 """
 from repro.dist.compat import ensure_shard_map
-from repro.dist.halo import HaloPlan, build_halo_plan, halo_aggregate, halo_exchange
+from repro.dist.halo import (
+    HaloPlan,
+    build_halo_plan,
+    halo_aggregate,
+    halo_exchange,
+    hier_halo_aggregate,
+    hier_halo_exchange,
+)
 from repro.dist.policy import NO_POLICY, ShardingPolicy
 
 __all__ = [
@@ -26,5 +38,7 @@ __all__ = [
     "build_halo_plan",
     "halo_exchange",
     "halo_aggregate",
+    "hier_halo_exchange",
+    "hier_halo_aggregate",
     "ensure_shard_map",
 ]

@@ -1,4 +1,5 @@
-"""Halo-exchange plan + collectives (DESIGN.md §7.2–7.3).
+"""Halo-exchange plans + collectives, flat and hierarchical (DESIGN.md §7–§8,
+docs/communication.md).
 
 COIN's broadcast schedule (paper Fig. 5c) ships each CE's FULL layer output
 to every other CE: ``(k−1)·n_local`` rows received per device per layer. The
@@ -11,31 +12,51 @@ executable invariant
 
 checked by ``tests/test_halo_dist.py`` on the 2000-node/8-partition case.
 
+On a single mesh axis every boundary row pays the same (worst-case) link.
+COIN's deeper claim is that intra-CE and inter-CE communication are DISTINCT
+cost tiers; the **hierarchical** plan (``axes=("pod", "model")``) maps that
+onto a 2-level mesh: devices within a pod talk over cheap links, pods talk
+over the expensive inter-pod fabric. Each device's boundary set splits into
+
+  * an **intra-pod segment** (``send_loc``) — rows some pod-mate reads,
+    padded to ``s_loc`` (the pad cheap-link traffic pays; no longer the
+    global worst case), and
+  * an **inter-pod segment** (``send_rem``) — rows some device in ANOTHER
+    pod reads, padded to ``s_rem``. Only these deduplicated rows — the rows
+    no pod-mate holds — ever cross the expensive tier.
+
+``halo_exchange`` lowers the flat plan to one collective over the single
+axis; ``hier_halo_exchange`` lowers the hierarchical plan to two phases:
+an inter-pod gather of the ``(s_rem, d)`` remote exports over the ``pod``
+axis, then an intra-pod gather over the ``model`` axis whose payload is the
+device's own ``(s_loc, d)`` intra exports concatenated with the relayed
+inter-pod block — remote rows cross the expensive link exactly once per
+pod pair and are re-distributed pod-internally over the cheap tier.
+
 ``build_halo_plan`` is the one-time host-side (numpy) relocation:
 
   1. permute nodes into contiguous per-device blocks (``perm``), one block
      per CE of the :class:`~repro.core.partition.Partition`,
-  2. pad every block to ``n_local`` rows and every export set to ``s_max``
-     entries so all devices run the same static shapes,
+  2. pad every block to ``n_local`` rows and every export set to its tier's
+     pad (``s_max``, or ``s_loc``/``s_rem``) so all devices run the same
+     static shapes,
   3. re-localize edges: every edge lives on its RECEIVER's device; receivers
      become local row ids and senders index the concatenation
-     ``[local block ‖ halo block]`` where halo slot ``j·s_max + t`` holds
-     row ``send_idx[j, t]`` exported by device ``j``.
-
-``halo_exchange`` / ``halo_aggregate`` are the matching device-side
-collectives, written against a 1-D mesh axis inside ``shard_map`` (all
-shapes static, so they lower to a single all_gather — or a ppermute ring —
-of the (s_max, d) export block).
+     ``[local block ‖ halo block]`` (layouts documented on :class:`HaloPlan`).
 
 Since plans are pure host data and expensive to build at scale (partition +
 relocation over up to 10⁷–10⁸ edges), this module also owns the **plan
-cache** (DESIGN.md §8): plans are memoized per ``(graph_hash, k, mesh_axis)``
-so every layer of every epoch reuses the one relocation. ``cached_halo_plan``
-is the lazy entry point (the builder only runs on a miss), ``get_halo_plan``
-the eager one, and ``invalidate_halo_plans`` drops entries — called by
-``train/elastic.py`` when an elastic resize changes the model-parallel degree
-(a re-partition event; the current replan is the full rebuild, an incremental
-boundary-delta replan is a future optimization).
+cache** (DESIGN.md §8): plans are memoized per ``(graph_hash, k, mesh_axes)``
+where ``mesh_axes`` is the single axis name (``"model"`` — single-axis keys
+are unchanged from PR 2) or the axes tuple WITH the pod count
+(``(("pod", "model"), n_pods)`` — the member-block layout depends on it), so
+flat and hierarchical plans for the same graph coexist without
+cross-invalidation and differently-podded meshes never collide.
+``cached_halo_plan`` is the lazy entry point (the builder only runs on a
+miss), ``get_halo_plan`` the eager one, and ``invalidate_halo_plans`` drops
+entries — called by ``train/elastic.py`` when an elastic resize changes the
+model-parallel degree (a re-partition event; the current replan is the full
+rebuild, an incremental boundary-delta replan is a future optimization).
 """
 from __future__ import annotations
 
@@ -57,6 +78,8 @@ __all__ = [
     "build_halo_plan",
     "halo_exchange",
     "halo_aggregate",
+    "hier_halo_exchange",
+    "hier_halo_aggregate",
     "graph_fingerprint",
     "cached_halo_plan",
     "get_halo_plan",
@@ -72,35 +95,66 @@ __all__ = [
 class HaloPlan:
     """Static-shape relocation of a partitioned graph onto k devices.
 
-    Array layout (leading axis k = one slice per device):
+    One plan describes ONE exchange schedule, selected by ``axes``:
+
+    * ``axes == ("model",)`` (default) — the **flat** single-axis plan of
+      DESIGN.md §7.2: one collective over ``k`` devices.
+    * ``axes == ("pod", "model")`` — the **hierarchical** plan: ``k ==
+      n_pods · k_model`` devices arranged pod-major (device ``g`` sits in
+      pod ``g // k_model`` as member ``g % k_model``, matching the
+      flattening order of ``jax.make_mesh((n_pods, k_model),
+      ("pod", "model"))``), exchanged in two phases by
+      :func:`hier_halo_exchange`.
+
+    Array layout shared by both (leading axis k = one slice per device):
 
       perm        (n_nodes,) int64   — new position → original node id; the
                                        first ``part_sizes[0]`` entries are
                                        device 0's nodes, and so on.
-      send_idx    (k, s_max)  int32  — local rows each device exports (the
-                                       distinct sources of its outgoing cut
-                                       edges), padded with row 0.
       senders_l   (k, e_local) int32 — per-edge source index into the
-                                       ``[local(n_local) ‖ halo(k·s_max)]``
-                                       concatenation.
-      receivers_l (k, e_local) int32 — per-edge local destination row.
+                                       ``[local ‖ halo]`` concatenation
+                                       (halo layout depends on ``axes``,
+                                       see below).
+      receivers_l (k, e_local) int32 — per-edge local destination row
+                                       (``< n_local``).
       edge_w      (k, e_local) f32   — edge weight; exactly 0 ⇒ padding edge
                                        (contributes nothing to aggregates).
       part_sizes  (k,) int64         — real (un-padded) rows per device block;
                                        rows ≥ part_sizes[b] of block b are
                                        zero padding.
 
-    The **s_max contract**: ``s_max`` is the size of the largest per-device
-    export set, and every device pads its export to exactly ``s_max`` rows
-    (with local row 0) so all k devices run the same static-shape program.
-    Consequently one exchange delivers exactly ``k·s_max`` halo rows per
-    device — the wire quantity the dry-run reports — and halo slot
-    ``j·s_max + t`` always holds row ``send_idx[j, t]`` of device j.
+    **Flat plan** (``axes == ("model",)``): ``send_idx`` is ``(k, s_max)``
+    int32 — the local rows each device exports (the distinct sources of its
+    outgoing cut edges), padded with row 0. The **s_max contract**: every
+    device pads its export to exactly ``s_max`` rows so all k devices run
+    the same static-shape program; one exchange delivers exactly ``k·s_max``
+    halo rows per device and halo slot ``j·s_max + t`` always holds row
+    ``send_idx[j, t]`` of device j. ``senders_l < n_local + k·s_max``.
+
+    **Hierarchical plan** (``axes == ("pod", "model")``): the boundary set of
+    each device splits into two padded export tables —
+
+      send_loc  (k, s_loc) int32 — rows read by some POD-MATE (cheap tier),
+      send_rem  (k, s_rem) int32 — rows read by some device in ANOTHER pod
+                                   (expensive tier; deduplicated — only rows
+                                   no pod-mate of the reader holds).
+
+    After the two-phase exchange, device ``(p, m)``'s neighbor table is
+    ``[local (n_local) ‖ k_model member blocks of width B]`` with
+    ``B = s_loc + n_pods·s_rem``; member block ``m'`` is
+    ``[send_loc rows of (p, m') ‖ for q in pods: send_rem rows of (q, m')]``.
+    So halo slot ``m'·B + t`` (t < s_loc) holds row ``send_loc[(p,m'), t]``
+    and slot ``m'·B + s_loc + q·s_rem + t`` holds row ``send_rem[(q,m'), t]``
+    — every boundary row in the system is addressable, and ``senders_l <
+    n_local + k_model·B``. For hierarchical plans ``s_max``/``send_idx``
+    still describe the flat single-axis exchange of the SAME partition: they
+    are retained as the accounting baseline (``flat_*`` properties) and must
+    NOT be mixed with the hierarchically remapped ``senders_l``.
     """
 
     k: int
     n_local: int                      # rows per device block (max part size)
-    s_max: int                        # export rows per device (padded)
+    s_max: int                        # flat export rows per device (padded)
     e_local: int                      # edges per device (padded)
     n_nodes: int
     perm: np.ndarray
@@ -109,11 +163,37 @@ class HaloPlan:
     receivers_l: np.ndarray
     edge_w: np.ndarray
     part_sizes: np.ndarray | None = None
+    # ------------------------------------------------ hierarchy (multi-axis)
+    axes: tuple[str, ...] = ("model",)
+    n_pods: int = 1
+    s_loc: int = 0                    # intra-pod export rows per device
+    s_rem: int = 0                    # inter-pod export rows per device
+    send_loc: np.ndarray | None = None
+    send_rem: np.ndarray | None = None
+
+    # ---------------------------------------------------------------- shape
+    @property
+    def is_hierarchical(self) -> bool:
+        """True for (pod, model) plans; False for single-axis plans."""
+        return len(self.axes) > 1
+
+    @property
+    def k_model(self) -> int:
+        """Devices per pod (== k for flat plans, where n_pods == 1)."""
+        return self.k // self.n_pods
+
+    @property
+    def block_rows(self) -> int:
+        """Hierarchical per-member halo block width B = s_loc + n_pods·s_rem."""
+        return self.s_loc + self.n_pods * self.s_rem
 
     # ---------------------------------------------------------------- wire
     @property
     def halo_rows_per_device(self) -> int:
-        """Rows received per device per exchange under the halo schedule."""
+        """Rows received per device per exchange under THIS plan's schedule
+        (flat: ``k·s_max``; hierarchical: both phases summed)."""
+        if self.is_hierarchical:
+            return self.inter_pod_rows_per_device + self.intra_pod_rows_per_device
         return self.k * self.s_max
 
     @property
@@ -121,48 +201,76 @@ class HaloPlan:
         """Rows received per device per layer under the broadcast schedule."""
         return (self.k - 1) * self.n_local
 
+    @property
+    def inter_pod_rows_per_device(self) -> int:
+        """Hierarchical phase-1 rows received per device (``n_pods·s_rem``,
+        self-pod slot included for uniform static shapes)."""
+        return self.n_pods * self.s_rem
+
+    @property
+    def intra_pod_rows_per_device(self) -> int:
+        """Hierarchical phase-2 rows received per device over the cheap tier
+        (``k_model·(s_loc + n_pods·s_rem)`` — pod-mates' intra exports plus
+        the relayed inter-pod blocks)."""
+        return self.k_model * self.block_rows
+
+    @property
+    def inter_pod_rows_crossing(self) -> int:
+        """Rows that actually CROSS the expensive inter-pod fabric per device
+        per exchange (``(n_pods−1)·s_rem`` — the self-pod slot never leaves)."""
+        return (self.n_pods - 1) * self.s_rem
+
+    @property
+    def flat_inter_pod_rows_crossing(self) -> int:
+        """Inter-pod crossing rows the FLAT single-axis schedule would move on
+        the same partition and pod grouping: ``(n_pods−1)·k_model·s_max``
+        (every remote device's full padded export reaches every device)."""
+        return (self.n_pods - 1) * self.k_model * self.s_max
+
     def wire_fraction(self) -> float:
         """halo ÷ broadcast received-row ratio (< 1 ⇔ halo wins)."""
         return self.halo_rows_per_device / max(self.broadcast_rows_per_device, 1)
 
     # -------------------------------------------------------------- device
-    def device_arrays(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """(send_idx, senders_l, receivers_l, edge_w) as device arrays, each
-        with the leading k axis to be sharded one-slice-per-device."""
-        return (
-            jnp.asarray(self.send_idx, jnp.int32),
+    def device_arrays(self) -> tuple[jnp.ndarray, ...]:
+        """The plan tables as device arrays, each with the leading k axis to
+        be sharded one-slice-per-device.
+
+        Flat plans return ``(send_idx, senders_l, receivers_l, edge_w)``;
+        hierarchical plans return ``(send_loc, send_rem, senders_l,
+        receivers_l, edge_w)`` (the two export tiers replace ``send_idx``).
+        """
+        tail = (
             jnp.asarray(self.senders_l, jnp.int32),
             jnp.asarray(self.receivers_l, jnp.int32),
             jnp.asarray(self.edge_w, jnp.float32),
         )
+        if self.is_hierarchical:
+            return (
+                jnp.asarray(self.send_loc, jnp.int32),
+                jnp.asarray(self.send_rem, jnp.int32),
+            ) + tail
+        return (jnp.asarray(self.send_idx, jnp.int32),) + tail
 
     def abstract_inputs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
-        """ShapeDtypeStructs mirroring :meth:`device_arrays` (dry-run path)."""
-        return (
-            jax.ShapeDtypeStruct((self.k, self.s_max), jnp.int32),
+        """ShapeDtypeStructs mirroring :meth:`device_arrays` (dry-run path):
+        4-tuple for flat plans, 5-tuple for hierarchical ones."""
+        tail = (
             jax.ShapeDtypeStruct((self.k, self.e_local), jnp.int32),
             jax.ShapeDtypeStruct((self.k, self.e_local), jnp.int32),
             jax.ShapeDtypeStruct((self.k, self.e_local), jnp.float32),
         )
+        if self.is_hierarchical:
+            return (
+                jax.ShapeDtypeStruct((self.k, self.s_loc), jnp.int32),
+                jax.ShapeDtypeStruct((self.k, self.s_rem), jnp.int32),
+            ) + tail
+        return (jax.ShapeDtypeStruct((self.k, self.s_max), jnp.int32),) + tail
 
 
-def build_halo_plan(part, edge_index: np.ndarray, w: np.ndarray | None = None) -> HaloPlan:
-    """Relocate a :class:`~repro.core.partition.Partition` into a HaloPlan.
-
-    edge_index: (2, E) directed (src, dst); each edge is placed on its
-    destination's device. ``w`` defaults to all-ones; padding edges get
-    weight 0, so ``(edge_w > 0).sum() == E`` accounts for every real edge
-    exactly once (the seed-suite invariant).
-    """
-    assignment = np.asarray(part.assignment, dtype=np.int64)
-    k = int(part.k)
-    n = int(part.n_nodes)
-    src = np.asarray(edge_index[0], dtype=np.int64)
-    dst = np.asarray(edge_index[1], dtype=np.int64)
-    e = int(src.shape[0])
-    w = np.ones(e, np.float32) if w is None else np.asarray(w, np.float32)
-
-    # 1. contiguous per-device blocks --------------------------------------
+# ============================================================= host builders
+def _blocked_layout(assignment: np.ndarray, k: int, n: int):
+    """Contiguous per-device blocks: (perm, sizes, n_local, local-row map)."""
     perm = np.argsort(assignment, kind="stable").astype(np.int64)
     inv = np.empty(n, np.int64)
     inv[perm] = np.arange(n, dtype=np.int64)
@@ -171,35 +279,44 @@ def build_halo_plan(part, edge_index: np.ndarray, w: np.ndarray | None = None) -
     np.cumsum(sizes, out=offsets[1:])
     n_local = int(sizes.max()) if n else 0
     local = inv - offsets[assignment]          # local row of every node
+    return perm, sizes, n_local, local
 
-    a_s, a_d = assignment[src], assignment[dst]
-    cut = a_s != a_d
 
-    # 2. export sets: distinct (source device, source node) of cut edges ---
-    pair = a_s[cut] * n + src[cut]             # unique id per (dev, node)
+def _export_sets(a_sel: np.ndarray, src_sel: np.ndarray, k: int, n: int, local: np.ndarray):
+    """Distinct (source device, source node) export sets of a cut-edge subset.
+
+    Returns ``(s, send, slots_for)``: the pad ``s`` (largest per-device set),
+    the padded ``(k, s)`` table of exported local rows, and a vectorized
+    ``slots_for(devs, nodes) -> slot`` resolving each pair's position inside
+    its device's export set.
+    """
+    pair = a_sel * n + src_sel                 # unique id per (dev, node)
     uniq = np.unique(pair)
-    send_dev = uniq // max(n, 1)
-    send_node = uniq % max(n, 1)
-    send_counts = np.bincount(send_dev, minlength=k).astype(np.int64)
-    s_max = int(send_counts.max()) if uniq.size else 0
-    dev_start = np.zeros(k + 1, np.int64)
-    np.cumsum(send_counts, out=dev_start[1:])
-    send_idx = np.zeros((k, s_max), np.int32)
+    dev = uniq // max(n, 1)
+    node = uniq % max(n, 1)
+    counts = np.bincount(dev, minlength=k).astype(np.int64)
+    s = int(counts.max()) if uniq.size else 0
+    start = np.zeros(k + 1, np.int64)
+    np.cumsum(counts, out=start[1:])
+    send = np.zeros((k, s), np.int32)
     if uniq.size:
-        slot = np.arange(uniq.size, dtype=np.int64) - dev_start[send_dev]
-        send_idx[send_dev, slot] = local[send_node].astype(np.int32)
+        slot = np.arange(uniq.size, dtype=np.int64) - start[dev]
+        send[dev, slot] = local[node].astype(np.int32)
 
-    # 3. re-localized edges, grouped by the receiver's device --------------
-    senders_full = local[src].copy()
-    if uniq.size:
-        # np.unique output is sorted, so searchsorted recovers each cut
-        # edge's slot in its source device's export set.
-        pos = np.searchsorted(uniq, a_s[cut] * n + src[cut])
-        halo_slot = pos - dev_start[a_s[cut]]
-        senders_full[cut] = n_local + a_s[cut] * s_max + halo_slot
-    receivers_full = local[dst]
+    def slots_for(devs: np.ndarray, nodes: np.ndarray) -> np.ndarray:
+        # np.unique output is sorted, so searchsorted recovers each pair's
+        # slot in its source device's export set.
+        pos = np.searchsorted(uniq, devs * n + nodes)
+        return pos - start[devs]
 
-    owner = a_d
+    return s, send, slots_for
+
+
+def _group_edges_by_receiver(
+    owner: np.ndarray, senders_full: np.ndarray, receivers_full: np.ndarray,
+    w: np.ndarray, k: int, e: int,
+):
+    """Pack re-localized edges into padded per-receiver-device tables."""
     e_counts = np.bincount(owner, minlength=k).astype(np.int64)
     e_local = max(int(e_counts.max()) if e else 0, 1)
     e_start = np.zeros(k + 1, np.int64)
@@ -214,19 +331,108 @@ def build_halo_plan(part, edge_index: np.ndarray, w: np.ndarray | None = None) -
         senders_l[own_o, e_slot] = senders_full[order].astype(np.int32)
         receivers_l[own_o, e_slot] = receivers_full[order].astype(np.int32)
         edge_w[own_o, e_slot] = w[order]
+    return senders_l, receivers_l, edge_w, e_local
+
+
+def build_halo_plan(
+    part,
+    edge_index: np.ndarray,
+    w: np.ndarray | None = None,
+    *,
+    axes: tuple[str, ...] = ("model",),
+    pods: int = 1,
+) -> HaloPlan:
+    """Relocate a :class:`~repro.core.partition.Partition` into a HaloPlan.
+
+    edge_index — (2, E) directed (src, dst); each edge is placed on its
+    destination's device. ``w`` defaults to all-ones; padding edges get
+    weight 0, so ``(edge_w > 0).sum() == E`` accounts for every real edge
+    exactly once (the seed-suite invariant).
+
+    axes/pods — select the exchange schedule. The default (a single axis,
+    ``pods == 1``) builds the flat plan of DESIGN.md §7.2, byte-identical to
+    the pre-hierarchy builder. ``axes=("pod", "model"), pods=n`` builds the
+    hierarchical plan: ``part.k`` must be divisible by ``pods``, devices are
+    grouped pod-major (device g → pod ``g // (k/pods)``), and ``senders_l``
+    is remapped against the two-phase halo table documented on
+    :class:`HaloPlan`. Hierarchical plans also carry the flat
+    ``send_idx``/``s_max`` of the same partition as the accounting baseline.
+    """
+    if len(axes) not in (1, 2):
+        raise ValueError(f"axes must name 1 or 2 mesh axes, got {axes!r}")
+    if len(axes) == 2 and len(set(axes)) != 2:
+        raise ValueError(f"hierarchical axes must be distinct, got {axes!r}")
+    if len(axes) == 1 and pods != 1:
+        raise ValueError("pods > 1 requires two mesh axes, e.g. ('pod', 'model')")
+    assignment = np.asarray(part.assignment, dtype=np.int64)
+    k = int(part.k)
+    if pods < 1 or k % pods:
+        raise ValueError(f"pods={pods} must divide the partition's k={k}")
+    n = int(part.n_nodes)
+    src = np.asarray(edge_index[0], dtype=np.int64)
+    dst = np.asarray(edge_index[1], dtype=np.int64)
+    e = int(src.shape[0])
+    w = np.ones(e, np.float32) if w is None else np.asarray(w, np.float32)
+
+    # 1. contiguous per-device blocks --------------------------------------
+    perm, sizes, n_local, local = _blocked_layout(assignment, k, n)
+    a_s, a_d = assignment[src], assignment[dst]
+    cut = a_s != a_d
+
+    # 2. export sets: distinct (source device, source node) of cut edges ---
+    s_max, send_idx, flat_slots = _export_sets(a_s[cut], src[cut], k, n, local)
+
+    hierarchical = len(axes) == 2
+    senders_full = local[src].copy()
+    if hierarchical:
+        # Tier split: an intra-pod cut edge reads a pod-mate's row (cheap
+        # link); an inter-pod cut edge reads a row no pod-mate holds
+        # (expensive link). Padding is per tier, so cheap traffic no longer
+        # pays the global worst-case s_max.
+        k_model = k // pods
+        p_s, p_d = a_s // k_model, a_d // k_model
+        m_s = a_s % k_model
+        icut = cut & (p_s == p_d)
+        xcut = p_s != p_d
+        s_loc, send_loc, loc_slots = _export_sets(a_s[icut], src[icut], k, n, local)
+        s_rem, send_rem, rem_slots = _export_sets(a_s[xcut], src[xcut], k, n, local)
+        B = s_loc + pods * s_rem
+        if np.any(icut):
+            senders_full[icut] = (
+                n_local + m_s[icut] * B + loc_slots(a_s[icut], src[icut])
+            )
+        if np.any(xcut):
+            senders_full[xcut] = (
+                n_local + m_s[xcut] * B + s_loc
+                + p_s[xcut] * s_rem + rem_slots(a_s[xcut], src[xcut])
+            )
+    else:
+        s_loc = s_rem = 0
+        send_loc = send_rem = None
+        if np.any(cut):
+            senders_full[cut] = n_local + a_s[cut] * s_max + flat_slots(a_s[cut], src[cut])
+
+    # 3. re-localized edges, grouped by the receiver's device --------------
+    senders_l, receivers_l, edge_w, e_local = _group_edges_by_receiver(
+        a_d, senders_full, local[dst], w, k, e
+    )
 
     return HaloPlan(
         k=k, n_local=n_local, s_max=s_max, e_local=e_local, n_nodes=n,
         perm=perm, send_idx=send_idx, senders_l=senders_l,
         receivers_l=receivers_l, edge_w=edge_w, part_sizes=sizes,
+        axes=tuple(axes), n_pods=pods, s_loc=s_loc, s_rem=s_rem,
+        send_loc=send_loc, send_rem=send_rem,
     )
 
 
 # ===================================================================== cache
-# Plans are pure host data keyed by (graph_hash, k, mesh_axis); one build
-# serves every layer of every epoch. The mesh axis participates in the key so
-# hierarchical (pod, model) extensions can cache per-axis plans side by side.
-_PLAN_CACHE: dict[tuple[str, int, str], HaloPlan] = {}
+# Plans are pure host data keyed by (graph_hash, k, mesh_axes); one build
+# serves every layer of every epoch. The axes component is the single axis
+# name (str — unchanged from the single-axis era) or the hierarchical
+# (axes tuple, n_pods) pair, so flat and (pod, model) plans for one graph
+# coexist side by side and differently-podded meshes never collide.
+_PLAN_CACHE: dict[tuple[str, int, object], HaloPlan] = {}
 _PLAN_STATS = {"hits": 0, "misses": 0}
 
 
@@ -256,18 +462,27 @@ def graph_fingerprint(
 def cached_halo_plan(
     graph_key: str,
     k: int,
-    mesh_axis: str = "model",
+    mesh_axis: "str | tuple[str, ...]" = "model",
     *,
+    pods: int = 1,
     builder: Callable[[], HaloPlan],
 ) -> HaloPlan:
     """Memoized plan lookup: ``builder()`` runs only on a cache miss.
 
     ``graph_key`` identifies the graph (and, when relevant, the partition) —
     either a :func:`graph_fingerprint` or any caller-chosen stable string.
-    The lazy builder matters at scale: on a hit, neither the graph nor the
-    partition needs to exist in memory at all.
+    ``mesh_axis`` completes the key ``(graph_key, k, mesh_axis)``: a single
+    axis name for flat plans (the pre-hierarchy key, unchanged — ``pods``
+    is ignored) or the axes tuple — e.g. ``("pod", "model")`` — for
+    hierarchical plans, where ``pods`` joins the key component (the
+    member-block layout depends on the pod count, so a 2×4 and a 4×2 plan
+    of the same k=8 partition must never collide). Flat and hierarchical
+    plans therefore coexist without cross-invalidation. The lazy builder
+    matters at scale: on a hit, neither the graph nor the partition needs
+    to exist in memory at all.
     """
-    key = (graph_key, int(k), mesh_axis)
+    key_axes = mesh_axis if isinstance(mesh_axis, str) else (tuple(mesh_axis), int(pods))
+    key = (graph_key, int(k), key_axes)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_STATS["hits"] += 1
@@ -283,26 +498,47 @@ def get_halo_plan(
     edge_index: np.ndarray,
     w: np.ndarray | None = None,
     *,
-    mesh_axis: str = "model",
+    mesh_axis: "str | tuple[str, ...]" = "model",
     graph_key: str | None = None,
+    pods: int | None = None,
 ) -> HaloPlan:
-    """Cached :func:`build_halo_plan`: same graph/partition/k → same object.
+    """Cached :func:`build_halo_plan`: same graph/partition/k/axes → same
+    object.
 
     When ``graph_key`` is omitted the key is content-hashed from the edge
     list, weights, AND the partition assignment (two partitions of the same
     graph never collide). Mutating the graph or re-partitioning produces a
     different key, i.e. a fresh plan.
+
+    Single-axis (default): ``mesh_axis`` is the axis name, exactly as before
+    the hierarchy landed. Hierarchical: pass ``pods=n`` (axes default to
+    ``("pod", mesh_axis)``) or ``mesh_axis=("pod", "model")`` explicitly —
+    ``pods`` is then required; the cache key's axes component is the
+    (axes, pods) pair, so plans for different pod counts never collide.
     """
+    if isinstance(mesh_axis, tuple):
+        axes = mesh_axis
+        if len(axes) == 2 and not pods:
+            raise ValueError(f"hierarchical axes {axes!r} require pods=<n_pods>")
+    elif pods and pods > 1:
+        axes = ("pod", mesh_axis)
+    else:
+        axes = (mesh_axis,)
+    n_pods = pods if len(axes) == 2 else 1
+    key_axes = axes if len(axes) > 1 else axes[0]
     if graph_key is None:
         graph_key = graph_fingerprint(part.n_nodes, edge_index, w, part.assignment)
     return cached_halo_plan(
-        graph_key, part.k, mesh_axis, builder=lambda: build_halo_plan(part, edge_index, w)
+        graph_key, part.k, key_axes, pods=n_pods,
+        builder=lambda: build_halo_plan(part, edge_index, w, axes=axes, pods=n_pods),
     )
 
 
 def invalidate_halo_plans(graph_key: str | None = None) -> int:
     """Drop cached plans (all of them, or one graph's). Returns #evicted.
 
+    Matching is on the ``graph_key`` component only, so one graph's flat AND
+    hierarchical plans are evicted together — a re-partition stales both.
     ``train/elastic.py`` calls this on an elastic resize that changes the
     model-parallel degree: the node→CE partition is stale, so every plan
     derived from it is too. The next ``get_halo_plan``/``cached_halo_plan``
@@ -363,25 +599,18 @@ def node_mask(plan: HaloPlan) -> np.ndarray:
     return (rows < np.asarray(plan.part_sizes)[:, None]).astype(np.float32)
 
 
-def halo_exchange(
-    h: jnp.ndarray, send_idx: jnp.ndarray, axis_name: str, via: str = "all_gather"
-) -> jnp.ndarray:
-    """Exchange boundary rows across the named mesh axis (inside shard_map).
+# ======================================================= device collectives
+def _axis_gather(export: jnp.ndarray, axis_name: str, via: str) -> jnp.ndarray:
+    """Gather every device's ``(s, d)`` export block along one named mesh
+    axis → ``(axis_size·s, d)``, slots in absolute device order.
 
-    h        — (n_local, d) this device's block.
-    send_idx — (s_max,) local rows this device exports.
-    Returns the (k·s_max, d) halo block: slot ``j·s_max + t`` holds row
-    ``send_idx[j, t]`` of device j, for every j including self (the self
-    rows are redundant but keep the indexing uniform and the shapes static).
-
-    via="all_gather" lowers to one fused collective; via="ppermute" runs a
-    k−1 step neighbor ring (the NoC-shaped schedule COIN's mesh model
-    assumes) — identical results, different lowering.
+    via="all_gather" lowers to one fused collective; via="ppermute" runs an
+    axis_size−1 step neighbor ring (the NoC-shaped schedule COIN's mesh
+    model assumes) — identical results, different lowering.
     """
-    export = h[send_idx]                                  # (s_max, d)
     if export.shape[0] == 0:
-        # Nothing crosses the boundary (k = 1 or a fully-local partition);
-        # XLA rejects zero-width collectives, and (k·0, d) == (0, d) anyway.
+        # Nothing crosses this tier; XLA rejects zero-width collectives,
+        # and (axis_size·0, d) == (0, d) anyway.
         return export
     if via == "all_gather":
         return jax.lax.all_gather(export, axis_name, axis=0, tiled=True)
@@ -395,9 +624,56 @@ def halo_exchange(
         blocks.append(cur)
     # blocks[t] on device i is device (i+t) mod k's export; roll by the
     # device index to arrange slots in absolute device order.
-    stack = jnp.stack(blocks)                             # (k, s_max, d)
+    stack = jnp.stack(blocks)                             # (k, s, d)
     stack = jnp.roll(stack, jax.lax.axis_index(axis_name), axis=0)
     return stack.reshape(k * export.shape[0], *export.shape[1:])
+
+
+def halo_exchange(
+    h: jnp.ndarray, send_idx: jnp.ndarray, axis_name: str, via: str = "all_gather"
+) -> jnp.ndarray:
+    """Exchange boundary rows across ONE named mesh axis (inside shard_map).
+
+    h        — (n_local, d) this device's block.
+    send_idx — (s_max,) local rows this device exports.
+    Returns the (k·s_max, d) halo block: slot ``j·s_max + t`` holds row
+    ``send_idx[j, t]`` of device j, for every j including self (the self
+    rows are redundant but keep the indexing uniform and the shapes static).
+    This is the flat schedule; hierarchical (pod, model) plans go through
+    :func:`hier_halo_exchange` instead.
+    """
+    return _axis_gather(h[send_idx], axis_name, via)
+
+
+def hier_halo_exchange(
+    h: jnp.ndarray,
+    send_loc: jnp.ndarray,
+    send_rem: jnp.ndarray,
+    axes: tuple[str, str] = ("pod", "model"),
+    via: str = "all_gather",
+) -> jnp.ndarray:
+    """Two-phase (pod, model) boundary exchange (inside shard_map).
+
+    h        — (n_local, d) this device's block.
+    send_loc — (s_loc,) local rows some pod-mate reads.
+    send_rem — (s_rem,) local rows some OTHER pod reads (the deduplicated
+               inter-pod segment — the only rows that cross the expensive
+               tier).
+
+    Phase 1 (inter-pod, ``axes[0]``): gather the ``(s_rem, d)`` remote
+    exports across pods → ``(n_pods·s_rem, d)``; only these rows pay the
+    inter-pod fabric. Phase 2 (intra-pod, ``axes[1]``): gather
+    ``[h[send_loc] ‖ phase-1 block]`` across pod-mates — the cheap tier
+    both distributes local boundary rows and relays every remote row to the
+    pod members that need it. Returns the ``(k_model·B, d)`` halo block,
+    ``B = s_loc + n_pods·s_rem``, in the member-block layout documented on
+    :class:`HaloPlan` (slot ``m'·B + t`` ↦ intra row t of pod-mate m'; slot
+    ``m'·B + s_loc + q·s_rem + t`` ↦ remote row t of device (q, m')).
+    """
+    pod_axis, model_axis = axes
+    inter = _axis_gather(h[send_rem], pod_axis, via)      # (n_pods·s_rem, d)
+    block = jnp.concatenate([h[send_loc], inter], axis=0)  # (B, d)
+    return _axis_gather(block, model_axis, via)
 
 
 def halo_aggregate(
@@ -424,5 +700,24 @@ def halo_aggregate(
     equivalence test): padding edges carry weight 0 and drop out of the sum.
     """
     halo = halo_exchange(z, send_idx, axis_name, via=via)
+    full = jnp.concatenate([z, halo], axis=0)             # [local ‖ halo]
+    return aggregate(full, senders, receivers, z.shape[0], edge_w)
+
+
+def hier_halo_aggregate(
+    z: jnp.ndarray,
+    send_loc: jnp.ndarray,
+    send_rem: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_w: jnp.ndarray,
+    axes: tuple[str, str] = ("pod", "model"),
+    via: str = "all_gather",
+) -> jnp.ndarray:
+    """:func:`halo_aggregate` over the two-phase (pod, model) exchange: the
+    ``senders`` here must come from a hierarchical plan (they index the
+    member-block table of :func:`hier_halo_exchange`, < n_local + k_model·B).
+    """
+    halo = hier_halo_exchange(z, send_loc, send_rem, axes, via=via)
     full = jnp.concatenate([z, halo], axis=0)             # [local ‖ halo]
     return aggregate(full, senders, receivers, z.shape[0], edge_w)

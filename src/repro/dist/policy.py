@@ -17,7 +17,11 @@ The policy also carries the GNN **communication mode** (DESIGN.md §8):
 * ``comm="halo"`` — the default full-graph schedule: the model runs inside
   ``shard_map`` over a :class:`~repro.dist.halo.HaloPlan` layout, and
   ``neighbor_table(h)`` returns ``[local ‖ halo]`` — the device block plus
-  the exchanged boundary rows — which plan-relocalized senders index.
+  the exchanged boundary rows — which plan-relocalized senders index. On a
+  2-level ``(pod, model)`` mesh (``halo_axes`` set, hierarchical plan bound
+  via the ``send_loc``/``send_rem`` pair) the exchange is the two-phase
+  hierarchical collective of ``repro.dist.halo.hier_halo_exchange``
+  (docs/communication.md).
 
 Models call ``policy.neighbor_table(x)`` before every sender-side gather and
 work identically under both modes (and under :data:`NO_POLICY`, where the
@@ -43,10 +47,15 @@ class ShardingPolicy:
     mesh: Any = None
     specs: Mapping[str, PartitionSpec] = dataclasses.field(default_factory=dict)
     comm: str = "broadcast"            # "broadcast" | "halo"
-    halo_axis: str = "model"           # mesh axis the exchange runs over
+    halo_axis: str = "model"           # mesh axis the flat exchange runs over
+    halo_axes: tuple | None = None     # hierarchical axes, e.g. ("pod","model");
+                                       # None → the flat single-axis schedule
     halo_via: str = "all_gather"       # collective lowering (see halo_exchange)
     halo_send_idx: Any = None          # (s_max,) device export rows; bound
                                        # inside shard_map via bind_halo
+    halo_send_loc: Any = None          # (s_loc,) intra-pod export rows and
+    halo_send_rem: Any = None          # (s_rem,) inter-pod export rows —
+                                       # the hierarchical pair bind_halo binds
 
     def spec(self, name: str) -> PartitionSpec | None:
         """The PartitionSpec registered for ``name`` (None if unconstrained)."""
@@ -79,29 +88,68 @@ class ShardingPolicy:
     @property
     def is_halo(self) -> bool:
         """True once halo mode is armed: comm == "halo" AND the device's
-        export rows are bound (i.e. we are inside the shard_map body)."""
-        return self.comm == "halo" and self.halo_send_idx is not None
+        export rows are bound (i.e. we are inside the shard_map body) —
+        either the flat ``halo_send_idx`` or the hierarchical
+        ``halo_send_loc``/``halo_send_rem`` pair."""
+        return self.comm == "halo" and (
+            self.halo_send_idx is not None
+            or (self.halo_send_loc is not None and self.halo_send_rem is not None)
+        )
 
-    def bind_halo(self, send_idx: jax.Array) -> "ShardingPolicy":
-        """Copy with this device's (s_max,) export rows bound — called by the
-        launch layer inside the shard_map body, where ``send_idx`` is the
-        device's slice of ``HaloPlan.send_idx``."""
-        return dataclasses.replace(self, halo_send_idx=send_idx)
+    def bind_halo(
+        self,
+        send_idx: jax.Array | None = None,
+        *,
+        send_loc: jax.Array | None = None,
+        send_rem: jax.Array | None = None,
+    ) -> "ShardingPolicy":
+        """Copy with this device's export rows bound — called by the launch
+        layer inside the shard_map body.
+
+        Flat (single mesh axis): pass ``send_idx``, the device's (s_max,)
+        slice of ``HaloPlan.send_idx`` — unchanged from the single-axis era.
+        Hierarchical (``halo_axes=("pod", "model")``): pass the keyword pair
+        ``send_loc``/``send_rem``, the device's (s_loc,) intra-pod and
+        (s_rem,) inter-pod slices of ``HaloPlan.send_loc``/``send_rem``;
+        ``neighbor_table`` then runs the two-phase exchange. Exactly one of
+        the two forms must be provided.
+        """
+        if send_idx is not None and (send_loc is not None or send_rem is not None):
+            raise ValueError("bind_halo takes send_idx OR (send_loc, send_rem), not both")
+        if send_idx is None and (send_loc is None) != (send_rem is None):
+            raise ValueError("hierarchical bind_halo needs BOTH send_loc and send_rem")
+        if send_idx is None and send_loc is None:
+            raise ValueError("bind_halo needs send_idx or the (send_loc, send_rem) pair")
+        return dataclasses.replace(
+            self, halo_send_idx=send_idx, halo_send_loc=send_loc, halo_send_rem=send_rem
+        )
 
     def neighbor_table(self, x: jax.Array) -> jax.Array:
         """The table sender indices gather from.
 
         Broadcast / NO_POLICY / unbound halo: ``x`` itself (senders are
-        global rows). Armed halo: ``[x ‖ halo_exchange(x)]`` of shape
-        ``(n_local + k·s_max, d)``, which the plan's re-localized senders
-        index. Models call this before every sender-side gather; receiver-side
-        gathers stay on ``x`` directly (receivers are always local rows).
+        global rows). Armed flat halo: ``[x ‖ halo_exchange(x)]`` of shape
+        ``(n_local + k·s_max, d)``. Armed hierarchical halo (bound via the
+        ``send_loc``/``send_rem`` pair, with ``halo_axes`` naming the
+        (pod, model) axes): ``[x ‖ hier_halo_exchange(x)]`` of shape
+        ``(n_local + k_model·(s_loc + n_pods·s_rem), d)``. Either way the
+        plan's re-localized senders index the result. Models call this before
+        every sender-side gather; receiver-side gathers stay on ``x``
+        directly (receivers are always local rows).
         """
         if not self.is_halo:
             return x
-        from repro.dist.halo import halo_exchange
+        if self.halo_send_loc is not None:
+            from repro.dist.halo import hier_halo_exchange
 
-        halo = halo_exchange(x, self.halo_send_idx, self.halo_axis, via=self.halo_via)
+            axes = self.halo_axes or ("pod", self.halo_axis)
+            halo = hier_halo_exchange(
+                x, self.halo_send_loc, self.halo_send_rem, axes, via=self.halo_via
+            )
+        else:
+            from repro.dist.halo import halo_exchange
+
+            halo = halo_exchange(x, self.halo_send_idx, self.halo_axis, via=self.halo_via)
         return jax.numpy.concatenate([x, halo], axis=0)
 
 

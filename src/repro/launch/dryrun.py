@@ -125,19 +125,24 @@ def extrapolated_cost(cell, mesh) -> tuple[float, float, dict]:
 
 
 def exchange_accounting(cell, shape) -> dict | None:
-    """Analytic per-device wire rows of the GNN layer exchange (DESIGN.md §8).
+    """Analytic per-device wire rows of the GNN layer exchange (DESIGN.md §8,
+    docs/communication.md).
 
     Halo cells carry their HaloPlan, so the reported bytes-moved reflects the
-    ``k·s_max`` boundary rows each device actually receives — not the
-    ``(k−1)·n_local`` a broadcast schedule would ship; both numbers are
-    recorded so the wire cut is visible per record. Cells without a plan
-    (non-GNN, sampled, or forced-broadcast) return just the comm tag.
+    boundary rows each device actually receives — not the ``(k−1)·n_local``
+    a broadcast schedule would ship; both numbers are recorded so the wire
+    cut is visible per record. Hierarchical (pod, model) plans additionally
+    split the rows per tier — intra-pod (cheap links) vs inter-pod (rows
+    crossing the expensive fabric) — alongside the flat single-axis baseline
+    on the same partition, so the per-tier savings are visible. Cells
+    without a plan (non-GNN, sampled, or forced-broadcast) return just the
+    comm tag.
     """
     plan = getattr(cell, "halo_plan", None)
     if plan is None:
         return {"comm": cell.comm} if getattr(cell, "comm", None) else None
     d = shape.d_feat or 0
-    return {
+    out = {
         "comm": cell.comm,
         "halo_rows_per_device": plan.halo_rows_per_device,
         "broadcast_rows_per_device": plan.broadcast_rows_per_device,
@@ -145,6 +150,18 @@ def exchange_accounting(cell, shape) -> dict | None:
         "halo_bytes_per_exchange": plan.halo_rows_per_device * d * 4,
         "broadcast_bytes_per_exchange": plan.broadcast_rows_per_device * d * 4,
     }
+    if plan.is_hierarchical:
+        out.update(
+            axes=list(plan.axes),
+            pods=plan.n_pods,
+            intra_pod_rows_per_device=plan.intra_pod_rows_per_device,
+            inter_pod_rows_per_device=plan.inter_pod_rows_per_device,
+            inter_pod_rows_crossing=plan.inter_pod_rows_crossing,
+            flat_inter_pod_rows_crossing=plan.flat_inter_pod_rows_crossing,
+            inter_pod_bytes_crossing=plan.inter_pod_rows_crossing * d * 4,
+            flat_inter_pod_bytes_crossing=plan.flat_inter_pod_rows_crossing * d * 4,
+        )
+    return out
 
 
 def run_cell(

@@ -1,15 +1,23 @@
 """Production mesh construction (multi-pod dry-run contract, DESIGN.md §6).
 
-A FUNCTION, not a module-level constant — importing this module never touches
+FUNCTIONS, not module-level constants — importing this module never touches
 jax device state. Single-pod: 16×16 = 256 chips, axes (data, model).
 Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model); `pod` composes with
-`data` for gradient reduction / replica serving.
+`data` for gradient reduction / replica serving, and with `model` for the
+hierarchical (pod, model) halo exchange of full-graph GNN cells
+(docs/communication.md).
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "data_axes"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_halo_mesh",
+    "data_axes",
+    "halo_axes",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,7 +31,25 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_halo_mesh(pods: int, devices_per_pod: int):
+    """2-D (pod, model) mesh for hierarchical halo exchange — e.g. the
+    8-device 2×4 acceptance mesh. Devices are raveled pod-major, matching
+    the device→(pod, member) grouping ``build_halo_plan`` assumes."""
+    return jax.make_mesh((pods, devices_per_pod), ("pod", "model"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
-    """The batch-carrying axes: ('pod','data') on the multi-pod mesh."""
+    """The batch-carrying axes: ('pod','data') on the multi-pod mesh; only
+    axes the mesh actually has (a (pod, model) halo mesh yields ('pod',))."""
     names = mesh.axis_names
-    return ("pod", "data") if "pod" in names else ("data",)
+    return tuple(a for a in ("pod", "data") if a in names) or ("data",)
+
+
+def halo_axes(mesh) -> tuple[str, ...]:
+    """The axes a full-graph halo exchange runs over: ('pod','model') when
+    the mesh has a pod tier of width > 1 (hierarchical two-phase schedule),
+    else ('model',) (flat single-axis schedule — a size-1 pod axis is no
+    hierarchy, so e.g. ``make_halo_mesh(1, k)`` degenerates to flat)."""
+    if "pod" in mesh.axis_names and mesh.shape["pod"] > 1:
+        return ("pod", "model")
+    return ("model",)

@@ -134,8 +134,12 @@ def gnn_policy(mesh, batched: bool, comm: str = "halo") -> ShardingPolicy:
     schedule (DESIGN.md §8): "halo" (default — boundary-only exchange over a
     HaloPlan, inside shard_map) or "broadcast" (the paper's Fig. 5c layer-
     output all-gather via pjit sharding propagation, kept as the escape
-    hatch). Batched (sampled-block) cells have no cross-shard edges, so the
-    mode is irrelevant there."""
+    hatch). On a mesh with a ``pod`` tier the halo policy carries
+    ``halo_axes=("pod", "model")`` so ``neighbor_table`` runs the two-phase
+    hierarchical exchange (docs/communication.md). Batched (sampled-block)
+    cells have no cross-shard edges, so the mode is irrelevant there."""
+    from repro.launch.mesh import halo_axes
+
     da = data_axes(mesh)
     if batched:
         return ShardingPolicy(
@@ -151,7 +155,11 @@ def gnn_policy(mesh, batched: bool, comm: str = "halo") -> ShardingPolicy:
     if comm == "halo":
         # Inside shard_map the per-device block is unsharded; constrain calls
         # are no-ops (no registered names) and the exchange is explicit.
-        return ShardingPolicy(mesh=mesh, specs={}, comm="halo", halo_axis="model")
+        ha = halo_axes(mesh)
+        return ShardingPolicy(
+            mesh=mesh, specs={}, comm="halo", halo_axis="model",
+            halo_axes=ha if len(ha) > 1 else None,
+        )
     return ShardingPolicy(
         mesh=mesh,
         specs={

@@ -19,8 +19,12 @@ Full-graph GNN cells default to the **halo** communication schedule
 (DESIGN.md §8): the step runs inside shard_map over a cached
 `repro.dist.halo.HaloPlan`, exchanging only boundary rows per layer
 (`k·s_max` received rows/device) instead of the broadcast all-gather
-(`(k−1)·n_local`). Pass ``comm="broadcast"`` to `build_cell` for the
-paper-faithful Fig. 5c schedule (the escape hatch and the dry-run baseline).
+(`(k−1)·n_local`). On a mesh with a ``pod`` tier the cell shards the graph
+over ("pod", "model") jointly and the exchange turns hierarchical — two
+phases with per-tier padding, only deduplicated remote rows crossing the
+inter-pod fabric (DESIGN.md §8.3, docs/communication.md). Pass
+``comm="broadcast"`` to `build_cell` for the paper-faithful Fig. 5c
+schedule (the escape hatch and the dry-run baseline).
 """
 from __future__ import annotations
 
@@ -412,18 +416,21 @@ def _sampled_edges(shape: ShapeSpec) -> int:
     return e
 
 
-def _shape_halo_plan(n: int, e: int, k: int):
+def _shape_halo_plan(n: int, e: int, k: int, pods: int = 1):
     """Cached HaloPlan for the (n, e) shape-statistics synthetic graph.
 
     Abstract cells have no real graph — like the rest of the dry-run they run
     on the deterministic exact-count synthetic (DESIGN.md §5), partitioned
     with the locality-seeking BFS+refine that keeps export sets small
-    (DESIGN.md §7.3). The plan is memoized per (graph, k, axis) in
-    `repro.dist.halo`, so every layer/epoch/cell over the same shape reuses
-    one host-side relocation; the deterministic string key means a cache hit
-    skips graph synthesis and partitioning entirely.
+    (DESIGN.md §7.3). The plan is memoized per (graph, k, axes) in
+    `repro.dist.halo` (``pods > 1`` caches under the ("pod", "model") axes
+    tuple, side by side with the flat plan), so every layer/epoch/cell over
+    the same shape reuses one host-side relocation; the deterministic string
+    key means a cache hit skips graph synthesis and partitioning entirely.
     """
     from repro.dist.halo import build_halo_plan, cached_halo_plan
+
+    axes = ("pod", "model") if pods > 1 else ("model",)
 
     def build():
         from repro.core.partition import partition_graph
@@ -431,9 +438,12 @@ def _shape_halo_plan(n: int, e: int, k: int):
 
         g = citation_like(n, e, seed=0)
         part = partition_graph(n, g.edge_index, k, method="bfs", seed=0, refine=True)
-        return build_halo_plan(part, g.edge_index)
+        return build_halo_plan(part, g.edge_index, axes=axes, pods=pods)
 
-    return cached_halo_plan(f"citation_like:n{n}:e{e}:seed0", k, builder=build)
+    return cached_halo_plan(
+        f"citation_like:n{n}:e{e}:seed0", k,
+        axes if pods > 1 else "model", pods=pods, builder=build,
+    )
 
 
 def _gnn_halo_device_loss(arch_id: str, cfg):
@@ -493,12 +503,18 @@ def _gnn_halo_device_loss(arch_id: str, cfg):
 
 def _gnn_halo_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, plan) -> dict:
     """Abstract batch in the HaloPlan blocked layout: per-node arrays are
-    (k, n_local, …), per-edge arrays (k, e_local, …), plus the plan tables."""
+    (k, n_local, …), per-edge arrays (k, e_local, …), plus the plan tables
+    (flat: send_idx; hierarchical: the send_loc/send_rem tier pair)."""
     k, n_local, e_local = plan.k, plan.n_local, plan.e_local
-    si, sl, rl, ew = plan.abstract_inputs()
+    if plan.is_hierarchical:
+        sloc, srem, sl, rl, ew = plan.abstract_inputs()
+        send = {"send_loc": sloc, "send_rem": srem}
+    else:
+        si, sl, rl, ew = plan.abstract_inputs()
+        send = {"send_idx": si}
     batch = {
         "feats": _sds((k, n_local, shape.d_feat), F32),
-        "send_idx": si,
+        **send,
         "senders": sl,
         "receivers": rl,
         "edge_w": ew,
@@ -522,15 +538,24 @@ def _gnn_halo_cell(
 ) -> Cell:
     """Full-graph GNN train cell over the halo schedule (the default path).
 
-    The whole step runs inside shard_map on the "model" axis: each device
-    holds one HaloPlan block and every layer's neighbor aggregation goes
-    through `halo_exchange`/`halo_aggregate`-style boundary collectives via
-    ``policy.neighbor_table`` (DESIGN.md §8). Wire per device per exchange is
-    ``k·s_max`` rows vs the broadcast schedule's ``(k−1)·n_local``.
+    The whole step runs inside shard_map: each device holds one HaloPlan
+    block and every layer's neighbor aggregation goes through boundary
+    collectives via ``policy.neighbor_table`` (DESIGN.md §8). On a flat mesh
+    the exchange runs over the "model" axis (``k·s_max`` received rows vs
+    the broadcast schedule's ``(k−1)·n_local``); on a mesh with a ``pod``
+    tier the graph shards over (pod, model) jointly and the exchange is the
+    two-phase hierarchical collective — only deduplicated remote rows cross
+    the inter-pod fabric (docs/communication.md).
     """
-    k = mesh.shape["model"]
+    from repro.launch.mesh import halo_axes
+
+    axes = halo_axes(mesh)
+    hier = len(axes) > 1
+    pods = mesh.shape["pod"] if hier else 1
+    k = pods * mesh.shape["model"]
+    spec_axes = axes if hier else "model"
     n_raw, e_raw = _gnn_sizes(shape, pad_mult=1)
-    plan = _shape_halo_plan(n_raw, e_raw, k)
+    plan = _shape_halo_plan(n_raw, e_raw, k, pods)
     policy = sh.gnn_policy(mesh, batched=False, comm="halo")
 
     params_abs = _gnn_params(spec.arch_id, cfg, dtype)
@@ -539,7 +564,7 @@ def _gnn_halo_cell(
     batch_abs = _gnn_halo_batch_abstract(spec.arch_id, shape, cfg, plan)
     keys = sorted(batch_abs)
     batch_spec = {
-        kk: sh.named(mesh, P("model", *([None] * (len(v.shape) - 1))))
+        kk: sh.named(mesh, P(spec_axes, *([None] * (len(v.shape) - 1))))
         for kk, v in batch_abs.items()
     }
     device_loss = _gnn_halo_device_loss(spec.arch_id, cfg)
@@ -547,15 +572,18 @@ def _gnn_halo_cell(
     def total_loss(params, batch):
         def body(*args):
             b = {kk: a[0] for kk, a in zip(keys, args)}
-            pol = policy.bind_halo(b["send_idx"])
+            if hier:
+                pol = policy.bind_halo(send_loc=b["send_loc"], send_rem=b["send_rem"])
+            else:
+                pol = policy.bind_halo(b["send_idx"])
             wsum, wcnt = device_loss(params, b, pol)
-            loss = jax.lax.psum(wsum, "model") / jnp.maximum(
-                jax.lax.psum(wcnt, "model"), 1.0
+            loss = jax.lax.psum(wsum, spec_axes) / jnp.maximum(
+                jax.lax.psum(wcnt, spec_axes), 1.0
             )
             return loss[None]
         f = jax.shard_map(
             body, mesh=mesh,
-            in_specs=(P("model"),) * len(keys), out_specs=P("model"),
+            in_specs=(P(spec_axes),) * len(keys), out_specs=P(spec_axes),
         )
         return f(*[batch[kk] for kk in keys]).mean()
 
@@ -575,7 +603,12 @@ def _gnn_halo_cell(
         (p_shard, o_shard, batch_spec),
         (p_shard, o_shard, sh.named(mesh, P())),
         model_flops=_gnn_flops(spec.arch_id, shape, cfg) * 3.0,
-        note=f"full graph (halo k={k} s_max={plan.s_max} n_local={plan.n_local})",
+        note=(
+            f"full graph (hier halo pods={pods} k={k} s_loc={plan.s_loc} "
+            f"s_rem={plan.s_rem} n_local={plan.n_local})"
+            if hier else
+            f"full graph (halo k={k} s_max={plan.s_max} n_local={plan.n_local})"
+        ),
         cost_cells=cost_cells,
         comm="halo",
         halo_plan=plan,
