@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks.fig07_quant import fig07_quant_accuracy
-    from benchmarks.kernel_bench import kernel_rows, spmm_compare_rows
+    from benchmarks.kernel_bench import bench_kernels_rows, kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
     from benchmarks.paper_figs import (
         comm_tier_rows,
@@ -52,6 +52,7 @@ def main(argv=None) -> None:
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),
+        ("kernels-ragged", bench_kernels_rows),
         ("spmm", lambda: spmm_compare_rows(full=args.full)),
         ("serve", serve_rows),
         ("fig07", lambda: fig07_quant_accuracy(

@@ -13,7 +13,17 @@ implementation, where the dense-N² term becomes the E-edge sparse term:
   aggregation-first   : E·F + N·F·H  MACs
   feature-first (COIN): N·F·H + E·H  MACs
 
-This module provides both cost models and the order chooser used by the GCN
+For the ``"bsr"`` backend the aggregation is neither dense-N² nor per-edge:
+the MXU executes one 128×128 × 128×F matmul per **nonzero block**, padding
+tiles skipped by the ragged kernel (DESIGN.md §2). Its cost term is
+therefore ``nnz_blocks · B² · F`` — a graph whose communities pack into few
+tiles aggregates cheaper than its edge count suggests, and a shuffled graph
+pays for every smeared tile. `blocked_multiply_count` models it and
+`choose_order(backend="bsr", nnz_blocks=…)` uses it; the dry-run threads the
+same statistics into its FLOP accounting so hillclimb compares real kernel
+cost (`repro.launch.dryrun`).
+
+This module provides the cost models and the order chooser used by the GCN
 layer (`repro.models.gcn`) at trace time.
 """
 from __future__ import annotations
@@ -24,6 +34,7 @@ __all__ = [
     "DataflowCost",
     "dense_multiply_count",
     "sparse_multiply_count",
+    "blocked_multiply_count",
     "choose_order",
 ]
 
@@ -59,16 +70,39 @@ def sparse_multiply_count(n_nodes: int, n_edges: int, d_in: int, d_out: int) -> 
     return DataflowCost(aggregation_first=agg_first, feature_first=feat_first)
 
 
-def choose_order(n_nodes: int, d_in: int, d_out: int, n_edges: int | None = None) -> str:
+def blocked_multiply_count(
+    n_nodes: int, nnz_blocks: int, d_in: int, d_out: int, block: int = 128
+) -> DataflowCost:
+    """BSR-backend accounting: aggregation runs one B×B × B×F MXU matmul per
+    nonzero 128×128 tile (ragged kernel, padding skipped — DESIGN.md §2), so
+    the aggregation term is ``nnz_blocks · B² · F``, not ``E · F``. Locality
+    reordering (`repro.graph.structure.locality_block_order`) lowers
+    ``nnz_blocks`` and with it this cost — density-awareness the edge-count
+    model cannot see.
+    """
+    n, bb = float(n_nodes), float(nnz_blocks) * float(block) * float(block)
+    agg_first = bb * d_in + n * d_in * d_out
+    feat_first = n * d_in * d_out + bb * d_out
+    return DataflowCost(aggregation_first=agg_first, feature_first=feat_first)
+
+
+def choose_order(
+    n_nodes: int, d_in: int, d_out: int, n_edges: int | None = None,
+    backend: str = "segment", nnz_blocks: int | None = None, block: int = 128,
+) -> str:
     """COIN's rule: run X·W first iff it shrinks the aggregated width.
 
-    For both the dense and sparse cost models the comparison reduces to
-    d_out vs d_in (the N·F·H term is shared), so the chooser is exact for
-    either accounting. Ties go to feature-first (the paper's order).
+    For every cost model — dense, per-edge sparse, and the bsr backend's
+    per-nonzero-block model (``backend="bsr"`` with ``nnz_blocks``) — the
+    comparison reduces to d_out vs d_in (the N·F·H term is shared), so the
+    chooser is exact for any accounting; what changes between models is the
+    cost *magnitude*, which the dry-run/hillclimb FLOP accounting consumes.
+    Ties go to feature-first (the paper's order).
     """
-    cost = (
-        sparse_multiply_count(n_nodes, n_edges, d_in, d_out)
-        if n_edges is not None
-        else dense_multiply_count(n_nodes, d_in, d_out)
-    )
+    if backend == "bsr" and nnz_blocks is not None:
+        cost = blocked_multiply_count(n_nodes, nnz_blocks, d_in, d_out, block)
+    elif n_edges is not None:
+        cost = sparse_multiply_count(n_nodes, n_edges, d_in, d_out)
+    else:
+        cost = dense_multiply_count(n_nodes, d_in, d_out)
     return cost.best

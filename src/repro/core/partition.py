@@ -21,7 +21,13 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["Partition", "partition_graph", "measured_probabilities", "refine_partition"]
+__all__ = [
+    "Partition",
+    "partition_graph",
+    "measured_probabilities",
+    "refine_partition",
+    "bfs_traversal_order",
+]
 
 
 @dataclasses.dataclass
@@ -141,6 +147,52 @@ def _gather_ranges(indices: np.ndarray, starts: np.ndarray, ends: np.ndarray) ->
     idx = np.arange(total, dtype=np.int64)
     seg = np.searchsorted(out_off[1:], idx, side="right")
     return indices[starts[seg] + (idx - out_off[seg])]
+
+
+def bfs_traversal_order(n_nodes: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Parent-ordered BFS traversal order — I-GCN-style islandization.
+
+    Returns ``order`` (position → node id): nodes appear in BFS discovery
+    order over the symmetrized graph, with each frontier sorted by its
+    PARENT's position (first-discoverer wins), so a community's members pack
+    contiguously instead of interleaving with every other community at the
+    same BFS depth — the property that makes this the default
+    dense-blocking permutation (`repro.graph.structure.locality_block_order`:
+    on shuffled planted-partition graphs it cuts nonzero 128×128 tiles
+    3–6×, at or beyond the planted community ordering itself). Disconnected
+    components are traversed in node-id order. Vectorized level-synchronous
+    sweep: O(E) per level, ~1 s for 262k nodes / 1M edges.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    both_s = np.concatenate([src, dst])
+    both_d = np.concatenate([dst, src])
+    indptr, indices = _csr_from_edges(n_nodes, both_s, both_d)
+    order = np.empty(n_nodes, np.int64)
+    seen = np.zeros(n_nodes, bool)
+    pos, next_root = 0, 0
+    while pos < n_nodes:
+        while next_root < n_nodes and seen[next_root]:
+            next_root += 1
+        frontier = np.array([next_root], np.int64)
+        seen[next_root] = True
+        while frontier.size:
+            order[pos:pos + frontier.size] = frontier
+            pos += frontier.size
+            starts, ends = indptr[frontier], indptr[frontier + 1]
+            counts = (ends - starts).astype(np.int64)
+            if counts.sum() == 0:
+                break
+            flat = _gather_ranges(indices, starts, ends)
+            flat = flat[~seen[flat]]
+            if flat.size == 0:
+                break
+            # Dedupe keeping FIRST discovery, then sort by that discovery
+            # position — children group under their (community-mate) parent.
+            uniq, first = np.unique(flat, return_index=True)
+            frontier = uniq[np.argsort(first, kind="stable")]
+            seen[frontier] = True
+    return order
 
 
 def refine_partition(

@@ -70,6 +70,7 @@ import numpy as np
 
 from repro.dist.compat import ensure_shard_map
 from repro.graph.ops import aggregate
+from repro.graph.structure import blocked_adjacency
 
 ensure_shard_map()
 
@@ -88,6 +89,9 @@ __all__ = [
     "relocate_node_array",
     "restore_node_array",
     "node_mask",
+    "PlanBlockedAdjacency",
+    "plan_blocked_adjacency",
+    "plan_blocked_shape",
 ]
 
 
@@ -186,6 +190,18 @@ class HaloPlan:
     def block_rows(self) -> int:
         """Hierarchical per-member halo block width B = s_loc + n_pods·s_rem."""
         return self.s_loc + self.n_pods * self.s_rem
+
+    @property
+    def neighbor_table_rows(self) -> int:
+        """Row count of the ``[local ‖ halo]`` table ``neighbor_table``
+        concatenates per device — the column space of the per-shard blocked
+        adjacency. Flat: ``n_local + k·s_max``. Hierarchical: ``n_local +
+        k_model·B`` (phase-1 inter-pod rows are RELAYED inside the member
+        blocks, so they do not widen the table — unlike
+        :attr:`halo_rows_per_device`, which counts both phases as wire)."""
+        if self.is_hierarchical:
+            return self.n_local + self.intra_pod_rows_per_device
+        return self.n_local + self.k * self.s_max
 
     # ---------------------------------------------------------------- wire
     @property
@@ -597,6 +613,179 @@ def node_mask(plan: HaloPlan) -> np.ndarray:
         raise ValueError("plan has no part_sizes (built by an older writer)")
     rows = np.arange(plan.n_local)[None, :]
     return (rows < np.asarray(plan.part_sizes)[:, None]).astype(np.float32)
+
+
+# =============================================== blocked (BSR) halo adjacency
+@dataclasses.dataclass
+class PlanBlockedAdjacency:
+    """Per-device ragged BSR over the ``[local ‖ halo]`` neighbor table.
+
+    The ``backend="bsr"`` counterpart of a plan's edge lists (DESIGN.md §2,
+    docs/kernels.md): device b's rows span its ``n_local`` local receivers
+    and its columns span the full ``n_local + halo`` table that
+    ``policy.neighbor_table`` produces inside shard_map, so the MXU kernel
+    aggregates exactly the rows the segment path gathers. Arrays carry the
+    leading k axis to be sharded one-slice-per-device (like
+    :meth:`HaloPlan.device_arrays`); T is the max nonzero-tile count across
+    ALL devices (uniform static shapes), with per-device raggedness kept in
+    ``lens`` so the kernel skips the cross-device padding too.
+
+      vals : (k, R, T, B, B) float32 — dense tiles
+      cols : (k, R, T) int32         — column-block ids into the padded table
+      lens : (k, R) int32            — ragged valid-tile counts
+    """
+
+    vals: np.ndarray
+    cols: np.ndarray
+    lens: np.ndarray
+    block: int
+    n_rows: int                        # n_local (receiver rows per device)
+    n_cols: int                        # n_local + halo rows (table width)
+
+    @property
+    def k(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def n_block_rows(self) -> int:
+        return int(self.vals.shape[1])
+
+    @property
+    def max_nnzb(self) -> int:
+        return int(self.vals.shape[2])
+
+    @property
+    def nnz_blocks(self) -> int:
+        """Total nonzero tiles across all devices."""
+        return int(self.lens.sum())
+
+    @property
+    def nnz_blocks_max_device(self) -> int:
+        """Critical-path device's nonzero tiles (devices run in lockstep)."""
+        return int(self.lens.sum(axis=1).max(initial=0))
+
+    @property
+    def padded_tile_fraction(self) -> float:
+        """Fraction of the (k, R, T) tile tables that is padding — skipped
+        by the ragged kernel, paid in full by a dense-T one."""
+        grid = self.k * self.n_block_rows * self.max_nnzb
+        return 1.0 - self.nnz_blocks / max(grid, 1)
+
+    def stats(self) -> dict:
+        """The dry-run / benchmark accounting record (all static host ints)."""
+        return {
+            "block": self.block,
+            "n_block_rows": self.n_block_rows,
+            "max_nnzb": self.max_nnzb,
+            "nnz_blocks": self.nnz_blocks,
+            "nnz_blocks_max_device": self.nnz_blocks_max_device,
+            "padded_tile_fraction": self.padded_tile_fraction,
+        }
+
+    def device_arrays(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(vals, cols, lens) as device arrays, leading k axis to shard."""
+        return (
+            jnp.asarray(self.vals),
+            jnp.asarray(self.cols, jnp.int32),
+            jnp.asarray(self.lens, jnp.int32),
+        )
+
+    def abstract_inputs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
+        """ShapeDtypeStructs mirroring :meth:`device_arrays` (dry-run path)."""
+        k, R, T, B = self.k, self.n_block_rows, self.max_nnzb, self.block
+        return (
+            jax.ShapeDtypeStruct((k, R, T, B, B), jnp.float32),
+            jax.ShapeDtypeStruct((k, R, T), jnp.int32),
+            jax.ShapeDtypeStruct((k, R), jnp.int32),
+        )
+
+
+def _plan_real_edges(plan: HaloPlan, b: int):
+    """Device b's real (non-padding) re-localized edges: (senders, receivers, w)."""
+    mask = plan.edge_w[b] > 0
+    return (
+        plan.senders_l[b][mask].astype(np.int64),
+        plan.receivers_l[b][mask].astype(np.int64),
+        plan.edge_w[b][mask],
+    )
+
+
+def plan_blocked_shape(plan: HaloPlan, block: int = 128) -> dict:
+    """Blocked-adjacency statistics of a plan WITHOUT materializing tiles.
+
+    Counts each device's distinct (receiver-block, sender-block) pairs over
+    the real edges — O(E) ints, no (…, B, B) allocation — so abstract
+    dry-run cells (`repro.launch.steps`) can size ``backend="bsr"`` batch
+    entries and report nonzero-block / padded-tile accounting at shapes
+    (ogbn-products) where materializing the tiles would not fit. Returns the
+    :meth:`PlanBlockedAdjacency.stats` dict plus ``n_rows``/``n_cols``.
+    """
+    n_cols = plan.neighbor_table_rows
+    nbr = max(-(-plan.n_local // block), 1)
+    nbc = -(-n_cols // block)
+    lens = np.zeros((plan.k, nbr), np.int64)
+    for b in range(plan.k):
+        s, r, _ = _plan_real_edges(plan, b)
+        uniq = np.unique((r // block) * nbc + (s // block))
+        lens[b] = np.bincount(uniq // nbc, minlength=nbr)
+    T = max(int(lens.max(initial=1)), 1)
+    nnz = int(lens.sum())
+    return {
+        "block": block,
+        "n_rows": plan.n_local,
+        "n_cols": n_cols,
+        "n_block_rows": nbr,
+        "max_nnzb": T,
+        "nnz_blocks": nnz,
+        "nnz_blocks_max_device": int(lens.sum(axis=1).max(initial=0)),
+        "padded_tile_fraction": 1.0 - nnz / max(plan.k * nbr * T, 1),
+    }
+
+
+def plan_blocked_adjacency(plan: HaloPlan, block: int = 128) -> PlanBlockedAdjacency:
+    """Materialize (and cache next to the plan) the per-shard blocked
+    adjacency that lets ``backend="bsr"`` run inside the halo shard_map path.
+
+    Each device's real edges — padding edges carry ``edge_w == 0`` and are
+    dropped, so padded gathers never materialize a tile — are blocked over
+    the rectangular (n_local) × (n_local + halo) space by
+    `repro.graph.structure.blocked_adjacency`, then padded to the max
+    nonzero-tile count T across devices (uniform shapes for shard_map). The
+    result is memoized on the plan instance per block size: like the plan
+    itself, one host-side build serves every layer of every epoch, and
+    dropping the plan (cache invalidation on re-partition) drops the blocks
+    with it.
+    """
+    cache = plan.__dict__.setdefault("_blocked_cache", {})
+    hit = cache.get(block)
+    if hit is not None:
+        return hit
+    n_cols = plan.neighbor_table_rows
+    nbr = max(-(-plan.n_local // block), 1)
+    per_dev = []
+    for b in range(plan.k):
+        s, r, w = _plan_real_edges(plan, b)
+        per_dev.append(
+            blocked_adjacency(
+                max(plan.n_local, 1), np.stack([s, r]), w, block, n_col_nodes=n_cols
+            )
+        )
+    T = max(ba.max_nnzb for ba in per_dev)
+    vals = np.zeros((plan.k, nbr, T, block, block), np.float32)
+    cols = np.zeros((plan.k, nbr, T), np.int32)
+    lens = np.zeros((plan.k, nbr), np.int32)
+    for b, ba in enumerate(per_dev):
+        t = ba.max_nnzb
+        vals[b, :, :t] = ba.block_vals
+        cols[b, :, :t] = ba.block_cols
+        cols[b, :, t:] = ba.block_cols[:, -1:]   # repeat-last padding contract
+        lens[b] = ba.row_nnzb
+    out = PlanBlockedAdjacency(
+        vals=vals, cols=cols, lens=lens, block=block,
+        n_rows=plan.n_local, n_cols=n_cols,
+    )
+    cache[block] = out
+    return out
 
 
 # ======================================================= device collectives

@@ -135,7 +135,12 @@ class ShardingPolicy:
         ``(n_local + k_model·(s_loc + n_pods·s_rem), d)``. Either way the
         plan's re-localized senders index the result. Models call this before
         every sender-side gather; receiver-side gathers stay on ``x``
-        directly (receivers are always local rows).
+        directly (receivers are always local rows). The table also feeds the
+        MXU path: under ``backend="bsr"`` the GCN aggregates it through the
+        per-shard blocked adjacency of
+        ``repro.dist.halo.plan_blocked_adjacency`` (whose column space is
+        exactly this concatenation) instead of a segment-sum — same rows,
+        same exchange, blocked compute (docs/kernels.md).
         """
         if not self.is_halo:
             return x

@@ -7,7 +7,17 @@ kernel, a CSR fanout neighbor sampler, and deterministic synthetic graph
 generators matching the paper's Table I statistics.
 """
 
-from repro.graph.structure import GraphData, PaddedGraph, to_padded, blocked_adjacency, BlockedAdjacency
+from repro.graph.structure import (
+    GraphData,
+    PaddedGraph,
+    to_padded,
+    blocked_adjacency,
+    BlockedAdjacency,
+    locality_block_order,
+    permute_edge_index,
+    relocate_rows,
+    restore_rows,
+)
 from repro.graph.ops import (
     aggregate,
     segment_softmax,
@@ -30,6 +40,10 @@ __all__ = [
     "to_padded",
     "blocked_adjacency",
     "BlockedAdjacency",
+    "locality_block_order",
+    "permute_edge_index",
+    "relocate_rows",
+    "restore_rows",
     "aggregate",
     "segment_softmax",
     "sym_norm_edge_weights",

@@ -1,23 +1,32 @@
-"""Pallas TPU kernel: 128×128 block-sparse SpMM — COIN's crossbar → MXU map.
+"""Pallas TPU kernel: ragged 128×128 block-sparse SpMM — COIN's crossbar → MXU map.
 
 COIN stores the adjacency "as is" in 128×128 RRAM crossbars and drives them
 with the intermediate features Z (paper §IV-C). The TPU-native adaptation
-(DESIGN.md §2) tiles Ã into 128×128 blocks, keeps only nonzero blocks, and
-feeds the MXU one dense 128×128 × 128×F_t matmul per nonzero block:
+(DESIGN.md §2, docs/kernels.md) tiles Ã into 128×128 blocks, keeps only
+nonzero blocks, and feeds the MXU one dense 128×128 × 128×F_t matmul per
+nonzero block:
 
-    out[r·B:(r+1)·B, f·Ft:(f+1)·Ft] = Σ_t vals[r,t] @ Z[cols[r,t]·B:…, f·Ft:…]
+    out[r·B:(r+1)·B, f·Ft:(f+1)·Ft] = Σ_{t < lens[r]} vals[r,t] @ Z[cols[r,t]·B:…, f·Ft:…]
 
 Layout (built host-side by `repro.graph.structure.blocked_adjacency`):
     vals : (R, T, B, B)  — per block-row, T = max nonzero blocks (padded with
                            zero tiles whose col id repeats the last valid one)
     cols : (R, T) int32  — block-column ids, SCALAR-PREFETCHED so the Z
                            BlockSpec index_map can do the indirect load
-    z    : (Cb·B, F)     — dense features
+    lens : (R,) int32    — RAGGED per-block-row tile counts (≤ T), also
+                           scalar-prefetched: tiles t ≥ lens[r] are padding
+                           and their matmul is skipped via `pl.when`, so a
+                           power-law hub row no longer taxes every other
+                           block-row with its worst-case T
+    z    : (Cb·B, F)     — dense features (Cb = column block count; may
+                           exceed the row block count for the rectangular
+                           halo-path matrices)
 
 Grid: (R, F/Ft, T) — t innermost so the output tile stays resident in VMEM
-across the accumulation; first t zero-initializes. VMEM footprint per step:
-B·B + B·Ft + B·Ft floats = 128·128 + 2·128·Ft → Ft=512 keeps it ≈ 0.6 MB,
-comfortably inside the ~16 MB v5e VMEM while MXU dims stay 128-aligned.
+across the accumulation; first t zero-initializes, padded t only re-asserts
+the revisited output block. VMEM footprint per step: B·B + B·Ft + B·Ft floats
+= 128·128 + 2·128·Ft → Ft=512 keeps it ≈ 0.6 MB, comfortably inside the
+~16 MB v5e VMEM while MXU dims stay 128-aligned.
 """
 from __future__ import annotations
 
@@ -31,22 +40,31 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["bsr_spmm_pallas"]
 
 
-def _kernel(cols_ref, vals_ref, z_ref, out_ref):
+def _kernel(cols_ref, lens_ref, vals_ref, z_ref, out_ref):
+    r = pl.program_id(0)
     t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = vals_ref[0, 0]                       # (B, B)
-    z = z_ref[...]                           # (B, Ft)
-    out_ref[...] += jnp.dot(a, z, preferred_element_type=jnp.float32).astype(out_ref.dtype)
+    # Ragged skip: tiles past this block-row's true count are padding — their
+    # vals are zero and their col id repeats the last valid one. Guarding the
+    # matmul turns the dense-T worst case into per-row work.
+    @pl.when(t < lens_ref[r])
+    def _accumulate():
+        a = vals_ref[0, 0]                   # (B, B)
+        z = z_ref[...]                       # (B, Ft)
+        out_ref[...] += jnp.dot(
+            a, z, preferred_element_type=jnp.float32
+        ).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
 def bsr_spmm_pallas(
     vals: jax.Array,          # (R, T, B, B)
     cols: jax.Array,          # (R, T) int32
+    lens: jax.Array,          # (R,) int32 ragged tile counts
     z: jax.Array,             # (Cb·B, F) — F must be a multiple of f_tile
     f_tile: int = 512,
     interpret: bool = False,
@@ -55,18 +73,19 @@ def bsr_spmm_pallas(
     F = z.shape[1]
     assert F % f_tile == 0, (F, f_tile)
     assert z.shape[0] % B == 0
+    assert lens.shape == (R,), (lens.shape, R)
     grid = (R, F // f_tile, T)
     return pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, B, B), lambda r, f, t, cols: (r, t, 0, 0)),
-                pl.BlockSpec((B, f_tile), lambda r, f, t, cols: (cols[r, t], f)),
+                pl.BlockSpec((1, 1, B, B), lambda r, f, t, cols, lens: (r, t, 0, 0)),
+                pl.BlockSpec((B, f_tile), lambda r, f, t, cols, lens: (cols[r, t], f)),
             ],
-            out_specs=pl.BlockSpec((B, f_tile), lambda r, f, t, cols: (r, f)),
+            out_specs=pl.BlockSpec((B, f_tile), lambda r, f, t, cols, lens: (r, f)),
         ),
         out_shape=jax.ShapeDtypeStruct((R * B, F), z.dtype),
         interpret=interpret,
-    )(cols, vals, z)
+    )(cols, lens, vals, z)

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: one fused ragged-BSR GCN layer (DESIGN.md §2, docs/kernels.md).
+
+The unfused `backend="bsr"` pipeline ran four HBM round-trips per layer:
+X·W matmul → SpMM → bias add → ReLU, each materializing an (N, F) tensor.
+This kernel computes the whole layer
+
+    H = act( Ã · (X · W) + b )        (feature-first, COIN §IV-C3)
+    H = act( (Ã · X) · W + b )        (aggregation-first)
+
+in ONE `pl.pallas_call` over the ragged blocked adjacency of
+`repro.graph.structure.blocked_adjacency`: the intermediate Z = X·W (or
+Ã·X) lives only in VMEM scratch, accumulation is fp32 regardless of the
+(optionally bf16) vals/feature dtype, and bias + activation run on the
+resident accumulator before the single output store.
+
+**Feature-first** (d_out ≤ d_in, the COIN order) — grid (R, F_out/Ft, T):
+per tile t < lens[r], compute z = X[cols[r,t]]·W[:, f-tile] on the fly and
+accumulate vals[r,t]·z into a (B, Ft) fp32 scratch; at the last t apply
+bias/activation and store. Z never exists in HBM; the X block is re-read
+(and its transform re-multiplied) once per nonzero tile — the fusion
+tradeoff, a win whenever the layer was HBM-bound (it was: Ft·B ≪ B·B).
+
+**Aggregation-first** — grid (R, T): accumulate vals[r,t]·X[cols[r,t]] into
+a (B, F_in) fp32 scratch, then one (B,F_in)×(F_in,F_out) matmul + bias +
+activation at the last t. No recompute at all; needs F_in·F_out weights
+resident in VMEM (fine for GCN widths; the wrapper asserts the footprint).
+
+Ragged skip: both kernels scalar-prefetch `lens` and guard the per-tile
+matmul with `pl.when(t < lens[r])`, so padding tiles cost a predicate, not
+an MXU pass. Empty block-rows (lens[r] == 0) still produce act(b) — exactly
+what a zero adjacency row contributes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_gcn_layer_pallas"]
+
+
+def _ff_kernel(cols_ref, lens_ref, vals_ref, x_ref, w_ref, b_ref, out_ref, acc_ref, *, relu):
+    """Feature-first body: acc += vals @ (x @ w), epilogue at the last tile."""
+    r = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t < lens_ref[r])
+    def _accumulate():
+        a = vals_ref[0, 0]                                     # (B, B)
+        z = jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        ).astype(a.dtype)                                      # (B, Ft) on the fly
+        acc_ref[...] += jnp.dot(a, z, preferred_element_type=jnp.float32)
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _epilogue():
+        h = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            h = jnp.maximum(h, 0.0)
+        out_ref[...] = h.astype(out_ref.dtype)
+
+
+def _af_kernel(cols_ref, lens_ref, vals_ref, x_ref, w_ref, b_ref, out_ref, acc_ref, *, relu):
+    """Aggregation-first body: acc += vals @ x, matmul + epilogue at the end."""
+    r = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t < lens_ref[r])
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            vals_ref[0, 0], x_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _epilogue():
+        w = w_ref[...]
+        h = jnp.dot(
+            acc_ref[...].astype(w.dtype), w, preferred_element_type=jnp.float32
+        ) + b_ref[...].astype(jnp.float32)
+        if relu:
+            h = jnp.maximum(h, 0.0)
+        out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("order", "relu", "f_tile", "interpret")
+)
+def fused_gcn_layer_pallas(
+    vals: jax.Array,          # (R, T, B, B)
+    cols: jax.Array,          # (R, T) int32
+    lens: jax.Array,          # (R,) int32 ragged tile counts
+    x: jax.Array,             # (Cb·B, F_in) dense features, row-padded
+    w: jax.Array,             # (F_in, F_out)
+    b: jax.Array,             # (1, F_out)
+    order: str = "feature_first",
+    relu: bool = True,
+    f_tile: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    R, T, B, _ = vals.shape
+    F_in, F_out = w.shape
+    assert x.shape[0] % B == 0 and x.shape[1] == F_in, (x.shape, w.shape)
+    assert b.shape == (1, F_out), b.shape
+    assert lens.shape == (R,), (lens.shape, R)
+
+    if order == "feature_first":
+        assert F_out % f_tile == 0, (F_out, f_tile)
+        grid = (R, F_out // f_tile, T)
+        return pl.pallas_call(
+            functools.partial(_ff_kernel, relu=relu),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((1, 1, B, B), lambda r, f, t, cols, lens: (r, t, 0, 0)),
+                    pl.BlockSpec((B, F_in), lambda r, f, t, cols, lens: (cols[r, t], 0)),
+                    pl.BlockSpec((F_in, f_tile), lambda r, f, t, cols, lens: (0, f)),
+                    pl.BlockSpec((1, f_tile), lambda r, f, t, cols, lens: (0, f)),
+                ],
+                out_specs=pl.BlockSpec((B, f_tile), lambda r, f, t, cols, lens: (r, f)),
+                scratch_shapes=[pltpu.VMEM((B, f_tile), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((R * B, F_out), x.dtype),
+            interpret=interpret,
+        )(cols, lens, vals, x, w, b)
+
+    if order != "aggregation_first":
+        raise ValueError(f"unknown dataflow order: {order!r}")
+    grid = (R, T)
+    return pl.pallas_call(
+        functools.partial(_af_kernel, relu=relu),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, B, B), lambda r, t, cols, lens: (r, t, 0, 0)),
+                pl.BlockSpec((B, F_in), lambda r, t, cols, lens: (cols[r, t], 0)),
+                pl.BlockSpec((F_in, F_out), lambda r, t, cols, lens: (0, 0)),
+                pl.BlockSpec((1, F_out), lambda r, t, cols, lens: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((B, F_out), lambda r, t, cols, lens: (r, 0)),
+            scratch_shapes=[pltpu.VMEM((B, F_in), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((R * B, F_out), x.dtype),
+        interpret=interpret,
+    )(cols, lens, vals, x, w, b)

@@ -4,16 +4,36 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bsr_spmm_ref", "fm_interaction_ref", "flash_attention_ref"]
+__all__ = ["bsr_spmm_ref", "fused_gcn_layer_ref", "fm_interaction_ref", "flash_attention_ref"]
 
 
 def bsr_spmm_ref(vals: jax.Array, cols: jax.Array, z: jax.Array) -> jax.Array:
-    """Dense-gather oracle: out[r] = Σ_t vals[r,t] @ Z_block[cols[r,t]]."""
+    """Dense-gather oracle: out[r] = Σ_t vals[r,t] @ Z_block[cols[r,t]].
+
+    Ignores the ragged lengths on purpose — padding tiles are zero, so the
+    dense-T sum equals the ragged kernel's skip-padding sum exactly.
+    """
     R, T, B, _ = vals.shape
     F = z.shape[1]
     zb = z.reshape(-1, B, F)                       # (Cb, B, F)
     gathered = zb[cols]                            # (R, T, B, F)
     return jnp.einsum("rtij,rtjf->rif", vals, gathered).reshape(R * B, F)
+
+
+def fused_gcn_layer_ref(
+    vals: jax.Array, cols: jax.Array, z_or_x: jax.Array,
+    w: jax.Array, b: jax.Array,
+    order: str = "feature_first", relu: bool = True,
+) -> jax.Array:
+    """Unfused oracle of `repro.kernels.fused_gcn.fused_gcn_layer_pallas`:
+    the same layer as three separate fp32 ops."""
+    x = z_or_x.astype(jnp.float32)
+    if order == "feature_first":
+        h = bsr_spmm_ref(vals.astype(jnp.float32), cols, x @ w.astype(jnp.float32))
+    else:
+        h = bsr_spmm_ref(vals.astype(jnp.float32), cols, x) @ w.astype(jnp.float32)
+    h = h + jnp.reshape(b, (1, -1)).astype(jnp.float32)
+    return jnp.maximum(h, 0.0) if relu else h
 
 
 def fm_interaction_ref(emb: jax.Array) -> jax.Array:

@@ -134,7 +134,11 @@ def exchange_accounting(cell, shape) -> dict | None:
     cut is visible per record. Hierarchical (pod, model) plans additionally
     split the rows per tier — intra-pod (cheap links) vs inter-pod (rows
     crossing the expensive fabric) — alongside the flat single-axis baseline
-    on the same partition, so the per-tier savings are visible. Cells
+    on the same partition, so the per-tier savings are visible.
+    ``backend="bsr"`` GCN cells also carry the blocked-kernel statistics
+    (`repro.dist.halo.plan_blocked_shape`: nonzero 128×128 tiles and the
+    padded-tile fraction the ragged kernel skips), so hillclimb and the
+    roofline see the real blocked compute cost next to the wire cost. Cells
     without a plan (non-GNN, sampled, or forced-broadcast) return just the
     comm tag.
     """
@@ -150,6 +154,8 @@ def exchange_accounting(cell, shape) -> dict | None:
         "halo_bytes_per_exchange": plan.halo_rows_per_device * d * 4,
         "broadcast_bytes_per_exchange": plan.broadcast_rows_per_device * d * 4,
     }
+    if getattr(cell, "bsr_stats", None):
+        out["bsr"] = dict(cell.bsr_stats)
     if plan.is_hierarchical:
         out.update(
             axes=list(plan.axes),

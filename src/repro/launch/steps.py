@@ -77,6 +77,12 @@ class Cell:
     # dry-run reads wire accounting (k·s_max vs (k−1)·n_local) off it.
     comm: str | None = None
     halo_plan: Any = None
+    # backend="bsr" GCN cells: the blocked-adjacency statistics of
+    # `repro.dist.halo.plan_blocked_shape` (nonzero 128×128 tiles,
+    # padded-tile fraction) — the dry-run reports them in the `exchange`
+    # record and `model_flops` is computed from the blocked cost model
+    # (nnz_blocks·B²·F, repro.core.dataflow) instead of the edge count.
+    bsr_stats: dict | None = None
 
     def lower(self, mesh):
         jitted = jax.jit(
@@ -370,8 +376,13 @@ def _gnn_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, n_blocks: int | Non
     return batch
 
 
-def _gnn_flops(arch_id: str, shape: ShapeSpec, cfg) -> float:
-    """Useful forward FLOPs (2 × MACs of the defining matmuls per arch)."""
+def _gnn_flops(arch_id: str, shape: ShapeSpec, cfg, bsr_stats: dict | None = None) -> float:
+    """Useful forward FLOPs (2 × MACs of the defining matmuls per arch).
+
+    ``bsr_stats`` (a `repro.dist.halo.plan_blocked_shape` record) switches
+    the coin_gcn aggregation term to the blocked cost model so hillclimb and
+    the dry-run see the kernel's real nnz_blocks·B²·F work.
+    """
     n, e = float(shape.n_nodes), float(shape.n_edges)
     L = cfg.n_layers
     if arch_id == "equiformer-v2":
@@ -400,9 +411,19 @@ def _gnn_flops(arch_id: str, shape: ShapeSpec, cfg) -> float:
         per_n = (1 + cfg.n_agg_feats) * d * d                          # post-MLP on 13·d concat
         return 2.0 * L * (e * per_e + n * per_n)
     if arch_id == "coin_gcn":
+        bsr = bsr_stats
         total = 0.0
         for d_in, d_out in zip(cfg.layer_dims[:-1], cfg.layer_dims[1:]):
-            total += n * d_in * d_out + e * d_out                      # feature-first
+            if bsr is not None:
+                # Blocked cost: the ragged MXU kernel runs nnz_blocks·B²
+                # MACs per output feature, not E (repro.core.dataflow).
+                from repro.core.dataflow import blocked_multiply_count
+
+                total += blocked_multiply_count(
+                    n, bsr["nnz_blocks"], d_in, d_out, bsr["block"]
+                ).feature_first
+            else:
+                total += n * d_in * d_out + e * d_out                  # feature-first
         return 2.0 * total
     d = getattr(cfg, "d_hidden", 512)
     return 2.0 * L * (n * d * d + e * d)
@@ -460,8 +481,13 @@ def _gnn_halo_device_loss(arch_id: str, cfg):
         if arch_id == "coin_gcn":
             from repro.models.gcn import gcn_forward
 
+            adjacency = (
+                (b["bsr_vals"], b["bsr_cols"], b["bsr_lens"])
+                if "bsr_vals" in b else None
+            )
             logits = gcn_forward(
-                params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol
+                params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol,
+                adjacency=adjacency,
             ).astype(F32)
             lse = jax.scipy.special.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, b["labels"][:, None], axis=-1)[:, 0]
@@ -501,10 +527,15 @@ def _gnn_halo_device_loss(arch_id: str, cfg):
     return device_loss
 
 
-def _gnn_halo_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, plan) -> dict:
+def _gnn_halo_batch_abstract(
+    arch_id: str, shape: ShapeSpec, cfg, plan, bsr_stats: dict | None = None
+) -> dict:
     """Abstract batch in the HaloPlan blocked layout: per-node arrays are
     (k, n_local, …), per-edge arrays (k, e_local, …), plus the plan tables
-    (flat: send_idx; hierarchical: the send_loc/send_rem tier pair)."""
+    (flat: send_idx; hierarchical: the send_loc/send_rem tier pair).
+    ``backend="bsr"`` GCN cells additionally carry the per-shard blocked
+    adjacency triple, sized by `repro.dist.halo.plan_blocked_shape` so no
+    tile is ever materialized for abstract cells."""
     k, n_local, e_local = plan.k, plan.n_local, plan.e_local
     if plan.is_hierarchical:
         sloc, srem, sl, rl, ew = plan.abstract_inputs()
@@ -524,6 +555,11 @@ def _gnn_halo_batch_abstract(arch_id: str, shape: ShapeSpec, cfg, plan) -> dict:
     if arch_id == "graphcast":
         batch["edge_feats"] = _sds((k, e_local, cfg.d_edge_in), F32)
     if arch_id == "coin_gcn":
+        if bsr_stats is not None:
+            R, T, B = bsr_stats["n_block_rows"], bsr_stats["max_nnzb"], bsr_stats["block"]
+            batch["bsr_vals"] = _sds((k, R, T, B, B), F32)
+            batch["bsr_cols"] = _sds((k, R, T), I32)
+            batch["bsr_lens"] = _sds((k, R), I32)
         batch["labels"] = _sds((k, n_local), I32)
         batch["label_mask"] = _sds((k, n_local), F32)
     else:
@@ -557,11 +593,16 @@ def _gnn_halo_cell(
     n_raw, e_raw = _gnn_sizes(shape, pad_mult=1)
     plan = _shape_halo_plan(n_raw, e_raw, k, pods)
     policy = sh.gnn_policy(mesh, batched=False, comm="halo")
+    bsr_stats = None
+    if spec.arch_id == "coin_gcn" and getattr(cfg, "backend", "segment") == "bsr":
+        from repro.dist.halo import plan_blocked_shape
+
+        bsr_stats = plan_blocked_shape(plan)
 
     params_abs = _gnn_params(spec.arch_id, cfg, dtype)
     p_specs = sh.replicated_specs(params_abs)
     p_shard = sh.tree_named(mesh, p_specs)
-    batch_abs = _gnn_halo_batch_abstract(spec.arch_id, shape, cfg, plan)
+    batch_abs = _gnn_halo_batch_abstract(spec.arch_id, shape, cfg, plan, bsr_stats)
     keys = sorted(batch_abs)
     batch_spec = {
         kk: sh.named(mesh, P(spec_axes, *([None] * (len(v.shape) - 1))))
@@ -584,6 +625,9 @@ def _gnn_halo_cell(
         f = jax.shard_map(
             body, mesh=mesh,
             in_specs=(P(spec_axes),) * len(keys), out_specs=P(spec_axes),
+            # pallas_call (the backend="bsr" blocked aggregation) has no
+            # replication rule; psum-combined scalars make rep moot anyway.
+            check_vma=False,
         )
         return f(*[batch[kk] for kk in keys]).mean()
 
@@ -596,32 +640,48 @@ def _gnn_halo_cell(
         new_params, new_opt = opt.update(grads, opt_state, params)
         return new_params, new_opt, loss
 
+    note = (
+        f"full graph (hier halo pods={pods} k={k} s_loc={plan.s_loc} "
+        f"s_rem={plan.s_rem} n_local={plan.n_local})"
+        if hier else
+        f"full graph (halo k={k} s_max={plan.s_max} n_local={plan.n_local})"
+    )
+    if bsr_stats is not None:
+        note += (
+            f" bsr nnzb={bsr_stats['nnz_blocks']}"
+            f" padfrac={bsr_stats['padded_tile_fraction']:.2f}"
+        )
     return Cell(
         spec.arch_id, shape.name, "train_step",
         train_step,
         (params_abs, opt_abs, batch_abs),
         (p_shard, o_shard, batch_spec),
         (p_shard, o_shard, sh.named(mesh, P())),
-        model_flops=_gnn_flops(spec.arch_id, shape, cfg) * 3.0,
-        note=(
-            f"full graph (hier halo pods={pods} k={k} s_loc={plan.s_loc} "
-            f"s_rem={plan.s_rem} n_local={plan.n_local})"
-            if hier else
-            f"full graph (halo k={k} s_max={plan.s_max} n_local={plan.n_local})"
-        ),
+        model_flops=_gnn_flops(spec.arch_id, shape, cfg, bsr_stats) * 3.0,
+        note=note,
         cost_cells=cost_cells,
         comm="halo",
         halo_plan=plan,
+        bsr_stats=bsr_stats,
     )
 
 
 def _gnn_cell(
     spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32,
-    _as_cost_cell: bool = False, comm: str | None = None,
+    _as_cost_cell: bool = False, comm: str | None = None, optimized: bool = False,
 ) -> Cell:
     import dataclasses as dc
 
     cfg = spec.make_config(shape)
+    if (
+        optimized and spec.arch_id == "coin_gcn" and shape.batch_nodes is None
+        and comm != "broadcast"
+    ):
+        # §Perf: full-graph GCN aggregation on the ragged blocked MXU kernel
+        # (DESIGN.md §2) instead of the segment-sum reference. Halo cells
+        # only — they thread the per-shard blocked adjacency through the
+        # batch; the broadcast escape hatch has no adjacency to feed bsr.
+        cfg = dc.replace(cfg, backend="bsr")
     cost_cells = None
     big = (shape.n_edges or 0) > 2_000_000
     if (
@@ -791,11 +851,14 @@ def build_cell(
     comm selects the full-graph GNN communication schedule: None → the
     family default ("halo" for full-graph cells, DESIGN.md §8);
     "broadcast" → the paper-faithful layer-output all-gather escape hatch.
-    Non-GNN families ignore it."""
+    Non-GNN families ignore it. For coin_gcn full-graph cells optimized=True
+    also switches the aggregation to ``backend="bsr"`` (the ragged blocked
+    MXU kernel, with the per-shard blocked adjacency threaded through the
+    halo batch)."""
     if spec.family == "lm":
         return _lm_cell(spec, shape, mesh, optimized=optimized)
     if spec.family == "gnn":
-        return _gnn_cell(spec, shape, mesh, comm=comm)
+        return _gnn_cell(spec, shape, mesh, comm=comm, optimized=optimized)
     if spec.family == "recsys":
         return _recsys_cell(spec, shape, mesh)
     raise KeyError(spec.family)

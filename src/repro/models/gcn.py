@@ -6,7 +6,12 @@ fake quantization of weights/activations (§V-B, Fig. 7), and three
 aggregation backends:
 
   * "segment" — jax.ops.segment_sum over the edge list (reference; sparse),
-  * "bsr"     — the 128×128 blocked Pallas SpMM (COIN crossbar→MXU mapping),
+  * "bsr"     — the ragged 128×128 blocked Pallas path (COIN crossbar→MXU
+                mapping, DESIGN.md §2 / docs/kernels.md): unsharded layers
+                run entirely inside ONE `repro.kernels.fused_gcn` pallas_call
+                (transform, aggregation, bias, and ReLU fused — no per-layer
+                HBM round-trips for Z), and the dataflow chooser sees the
+                blocked cost model (nonzero blocks · B² · F),
   * "dense"   — dense Ã matmul (the paper's crossbars store zeros too; used
                 by the FLOP-accounting benchmarks, not for large graphs).
 
@@ -18,6 +23,14 @@ Fig. 5c schedule, kept as the escape hatch) the table is the identity and
 XLA inserts the layer-output all-gather for the node-sharded gather — see
 `repro.launch.shardings` and DESIGN.md §2. The `policy.constrain` calls
 below are the ShardingPolicy contract of DESIGN.md §7.1.
+
+The halo path accepts ``backend="bsr"`` too: pass the per-shard blocked
+adjacency built over the ``[local ‖ halo]`` neighbor table by
+`repro.dist.halo.plan_blocked_adjacency` (this device's (vals, cols, lens)
+slice) and each layer's aggregation runs on the MXU kernel —
+aggregation-first layers stay fully fused; feature-first layers exchange
+the transformed Z between the X·W matmul and the blocked aggregation (the
+collective cannot be fused through).
 """
 from __future__ import annotations
 
@@ -25,11 +38,14 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dataflow import choose_order
 from repro.core.quant import QuantConfig, fake_quant
 from repro.dist.policy import NO_POLICY, ShardingPolicy
 from repro.graph.ops import aggregate, aggregate_padded
+from repro.graph.structure import BlockedAdjacency
+from repro.kernels.ops import bsr_spmm, fused_gcn_layer
 
 __all__ = ["GCNConfig", "gcn_init", "gcn_forward", "gcn_loss"]
 
@@ -56,10 +72,84 @@ def gcn_init(key: jax.Array, cfg: GCNConfig, dtype=jnp.float32) -> dict:
     return params
 
 
-def _order(cfg: GCNConfig, n_nodes: int, d_in: int, d_out: int, n_edges: int) -> str:
+def _order(
+    cfg: GCNConfig, n_nodes: int, d_in: int, d_out: int, n_edges: int,
+    nnz_blocks: int | None = None, block: int = 128,
+) -> str:
     if cfg.dataflow != "auto":
         return cfg.dataflow
+    if cfg.backend == "bsr" and nnz_blocks is not None:
+        # Density-aware: the bsr backend's aggregation cost is per nonzero
+        # 128×128 tile, not per edge (repro.core.dataflow, DESIGN.md §3).
+        return choose_order(
+            n_nodes, d_in, d_out, backend="bsr", nnz_blocks=nnz_blocks, block=block
+        )
     return choose_order(n_nodes, d_in, d_out, n_edges=n_edges)
+
+
+def _normalize_adjacency(adjacency):
+    """Validate/unpack the ``adjacency`` argument of :func:`gcn_forward`.
+
+    Accepts a :class:`~repro.graph.structure.BlockedAdjacency` (preferred —
+    carries the ragged lengths and static block statistics), a
+    ``(vals, cols, lens)`` array triple (the halo shard_map form, this
+    device's slice of `repro.dist.halo.plan_blocked_adjacency`), or the
+    legacy ``(vals, cols)`` pair (dense-T: every tile treated as valid).
+    Returns ``(vals, cols, lens_or_None, static_nnz_blocks_or_None, block)``.
+    """
+    if isinstance(adjacency, BlockedAdjacency):
+        vals, cols, lens = adjacency.arrays()
+        return vals, cols, lens, adjacency.nnz_blocks, adjacency.block
+    if isinstance(adjacency, (tuple, list)):
+        if len(adjacency) == 3:
+            vals, cols, lens = adjacency
+        elif len(adjacency) == 2:
+            (vals, cols), lens = adjacency, None
+        else:
+            raise ValueError(
+                "backend='bsr' adjacency must be a BlockedAdjacency, "
+                "(vals, cols, lens), or (vals, cols) — got a "
+                f"{len(adjacency)}-tuple"
+            )
+        if getattr(vals, "ndim", 0) != 4 or getattr(cols, "ndim", 0) != 2:
+            raise ValueError(
+                "backend='bsr' adjacency arrays must be vals (R, T, B, B) and "
+                f"cols (R, T); got shapes {getattr(vals, 'shape', None)} and "
+                f"{getattr(cols, 'shape', None)}"
+            )
+        nnz = None
+        if lens is not None and not isinstance(lens, jax.core.Tracer):
+            nnz = int(np.asarray(lens).sum())
+        return vals, cols, lens, nnz, int(vals.shape[-1])
+    raise ValueError(
+        "backend='bsr' requires adjacency=BlockedAdjacency or its "
+        f"(vals, cols, lens) arrays; got {type(adjacency).__name__}"
+    )
+
+
+def _validate_backend_args(cfg: GCNConfig, policy: ShardingPolicy, adjacency, dense_adj):
+    """Up-front argument validation with actionable errors (not asserts)."""
+    if cfg.backend not in ("segment", "bsr", "dense"):
+        raise ValueError(
+            f"unknown GCN backend {cfg.backend!r}; expected 'segment', 'bsr', or 'dense'"
+        )
+    if cfg.backend == "dense":
+        if policy.is_halo:
+            raise ValueError(
+                "halo comm supports the 'segment' and 'bsr' backends; 'dense' "
+                "materializes the global adjacency and cannot run per-shard"
+            )
+        if dense_adj is None:
+            raise ValueError("backend='dense' requires the dense_adj=(N, N) matrix")
+    if cfg.backend == "bsr":
+        if adjacency is None:
+            raise ValueError(
+                "backend='bsr' requires adjacency= (a BlockedAdjacency from "
+                "repro.graph.structure.blocked_adjacency, or — under halo — "
+                "this device's slice of repro.dist.halo.plan_blocked_adjacency)"
+            )
+        return _normalize_adjacency(adjacency)
+    return None
 
 
 def gcn_forward(
@@ -70,32 +160,31 @@ def gcn_forward(
     edge_weight: jnp.ndarray,              # (E_pad,)
     cfg: GCNConfig,
     policy: ShardingPolicy = NO_POLICY,
-    adjacency=None,                        # BlockedAdjacency arrays for "bsr"
+    adjacency=None,                        # BlockedAdjacency (or arrays) for "bsr"
     dense_adj: jnp.ndarray | None = None,  # (N, N) for "dense"
 ) -> jnp.ndarray:
     n_nodes = x.shape[0]
     n_edges = int(senders.shape[0])
     q = cfg.quant
+    adj = _validate_backend_args(cfg, policy, adjacency, dense_adj)
+    vals, cols, lens, nnz_blocks, block = adj if adj is not None else (None,) * 4 + (128,)
+    # Unsharded bsr runs the whole layer in one fused pallas_call; under halo
+    # only aggregation-first layers can fuse (the boundary collective sits
+    # between X·W and the aggregation on feature-first layers).
+    fused = cfg.backend == "bsr" and not policy.is_halo
 
     def agg(z: jnp.ndarray) -> jnp.ndarray:
         if policy.is_halo:
             # Halo mode (DESIGN.md §8): senders index [local ‖ halo]; padding
             # edges carry weight 0 so no ghost row is needed.
-            if cfg.backend != "segment":
-                raise ValueError("halo comm supports only the 'segment' backend")
+            if cfg.backend == "bsr":
+                return bsr_spmm(vals, cols, policy.neighbor_table(z), lens=lens)[:n_nodes]
             return aggregate(policy.neighbor_table(z), senders, receivers, n_nodes, edge_weight)
         if cfg.backend == "segment":
             return aggregate_padded(z, senders, receivers, n_nodes, edge_weight)
         if cfg.backend == "dense":
-            assert dense_adj is not None
             return dense_adj @ z
-        if cfg.backend == "bsr":
-            from repro.kernels.ops import bsr_spmm
-
-            block_vals, block_cols = adjacency
-            out = bsr_spmm(block_vals, block_cols, z)
-            return out[:n_nodes]
-        raise ValueError(cfg.backend)
+        return bsr_spmm(vals, cols, z, lens=lens)[:n_nodes]
 
     h = x
     for i in range(cfg.n_layers):
@@ -104,18 +193,30 @@ def gcn_forward(
             w = fake_quant(w, q.weight_bits)
             h = fake_quant(h, q.act_bits, percentile=q.act_percentile)
         d_in, d_out = w.shape
-        order = _order(cfg, n_nodes, d_in, d_out, n_edges)
-        if order == "feature_first":
-            z = h @ w                       # feature extraction (Fig. 5a)
-            z = policy.constrain(z, "node_hidden")
-            h = agg(z)                      # aggregation (Fig. 5b)
+        order = _order(cfg, n_nodes, d_in, d_out, n_edges, nnz_blocks, block)
+        last = i == cfg.n_layers - 1
+        if fused:
+            h = fused_gcn_layer(
+                vals, cols, lens, h, w, params[f"b{i}"], order=order, relu=not last
+            )[:n_nodes]
+        elif cfg.backend == "bsr" and policy.is_halo and order == "aggregation_first":
+            # Exchange h, then one fused (Ã·table)·W + b + act pallas_call.
+            h = fused_gcn_layer(
+                vals, cols, lens, policy.neighbor_table(h), w, params[f"b{i}"],
+                order="aggregation_first", relu=not last,
+            )[:n_nodes]
         else:
-            z = agg(h)
-            z = policy.constrain(z, "node_hidden")
-            h = z @ w
-        h = h + params[f"b{i}"]
-        if i < cfg.n_layers - 1:
-            h = jax.nn.relu(h)              # activation unit (Fig. 3b)
+            if order == "feature_first":
+                z = h @ w                   # feature extraction (Fig. 5a)
+                z = policy.constrain(z, "node_hidden")
+                h = agg(z)                  # aggregation (Fig. 5b)
+            else:
+                z = agg(h)
+                z = policy.constrain(z, "node_hidden")
+                h = z @ w
+            h = h + params[f"b{i}"]
+            if not last:
+                h = jax.nn.relu(h)          # activation unit (Fig. 3b)
         h = policy.constrain(h, "node_hidden")
     return h
 
