@@ -1,0 +1,137 @@
+"""Communication benchmark: the overlapped/quantized halo wire trajectory.
+
+Builds the PINNED 2-pod × 4-device exchange case (the same 2000-node /
+12000-edge BFS+refined citation graph as `docs/communication.md` §5–§6 and
+`tests/test_hier_halo.py`) and records, per payload format, what the halo
+exchange moves and what the critical path actually waits on:
+
+* total vs **exposed** exchange bytes (`ExchangeCost`: exposed =
+  wire × (1 − overlap_fraction), the share the interior/boundary-split
+  overlapped schedule cannot hide),
+* the plan's `overlap_fraction` (interior-edge share),
+* quantized wire bytes per payload (fp32 / bf16 / int8 — bits/32 scaling),
+* the hierarchical per-tier split (inter-pod crossing vs intra-pod relay).
+
+`write_comm_bench` persists BENCH_comm.json and **asserts the acceptance
+gate**: the bf16 payload at least halves the boundary wire bytes of the
+fp32 baseline on this pinned case. CI uploads the file as an artifact so
+the numbers version with the code (`benchmarks.run` prints the same rows).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.dataflow import exchange_cost
+from repro.core.partition import partition_graph
+from repro.core.quant import PAYLOAD_BITS, payload_bits
+from repro.dist.halo import build_halo_plan
+from repro.graph.generators import citation_like
+
+# The pinned case (docs/communication.md §5): k=8 as 2 pods × 4, d=64.
+PINNED = dict(n=2000, e=12000, seed=1, k=8, pods=2, d=64)
+PAYLOADS = ("fp32", "bf16", "int8")
+
+
+def _plans(cfg=PINNED):
+    g = citation_like(cfg["n"], cfg["e"], seed=cfg["seed"])
+    part = partition_graph(
+        cfg["n"], g.edge_index, cfg["k"], method="bfs", seed=0, refine=True
+    )
+    flat = build_halo_plan(part, g.edge_index)
+    hier = build_halo_plan(
+        part, g.edge_index, axes=("pod", "model"), pods=cfg["pods"]
+    )
+    return flat, hier
+
+
+def comm_bench_record(cfg=PINNED) -> dict:
+    """The BENCH_comm.json record (host-side plan accounting, no devices)."""
+    flat, hier = _plans(cfg)
+    d = cfg["d"]
+    ov = flat.overlap_fraction()
+    rec: dict = {
+        "case": dict(cfg),
+        "n_local": int(flat.n_local),
+        "s_max": int(flat.s_max),
+        "s_loc": int(hier.s_loc),
+        "s_rem": int(hier.s_rem),
+        "overlap_fraction": float(ov),
+        "interior_edges": int(flat.interior_edges),
+        "boundary_edges": int(flat.boundary_edges),
+        "boundary_rows_max_device": int(flat.boundary_rows_per_device().max()),
+        "payloads": {},
+    }
+    k_model = cfg["k"] // cfg["pods"]
+    inter_rows = cfg["pods"] * hier.s_rem
+    intra_rows = k_model * (hier.s_loc + cfg["pods"] * hier.s_rem)
+    for payload in PAYLOADS:
+        bits = payload_bits(payload)
+        ec = exchange_cost(flat.halo_rows_per_device, d, bits, ov)
+        rec["payloads"][payload] = {
+            "bits": bits,
+            "wire_bytes_per_device_layer": ec.wire_bytes,
+            "exposed_bytes_per_device_layer": ec.exposed_bytes,
+            "compression_vs_fp32": ec.compression,
+            "hier_inter_pod_bytes": inter_rows * d * bits / 8.0,
+            "hier_intra_pod_bytes": intra_rows * d * bits / 8.0,
+            "hier_crossing_bytes": (cfg["pods"] - 1) * hier.s_rem * d * bits / 8.0,
+        }
+    return rec
+
+
+def write_comm_bench(path: str = "BENCH_comm.json", cfg=PINNED) -> dict:
+    rec = comm_bench_record(cfg)
+    fp32 = rec["payloads"]["fp32"]
+    bf16 = rec["payloads"]["bf16"]
+    # The acceptance gate: bf16 at least halves the boundary wire bytes.
+    assert bf16["wire_bytes_per_device_layer"] * 2 <= fp32["wire_bytes_per_device_layer"], (
+        "bf16 payload must at least halve the fp32 boundary wire bytes",
+        bf16["wire_bytes_per_device_layer"],
+        fp32["wire_bytes_per_device_layer"],
+    )
+    assert bf16["hier_crossing_bytes"] * 2 <= fp32["hier_crossing_bytes"]
+    # Overlap must expose strictly less than it ships (real interior work).
+    assert 0.0 < rec["overlap_fraction"] < 1.0
+    for p in rec["payloads"].values():
+        assert p["exposed_bytes_per_device_layer"] < p["wire_bytes_per_device_layer"]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def comm_rows():
+    """`benchmarks.run` suite: persist BENCH_comm.json + print per-payload
+    wire/exposed bytes for the pinned 2×4 case."""
+    rec = write_comm_bench()
+    rows = []
+    for payload, p in rec["payloads"].items():
+        rows.append((
+            f"comm/halo_wire_{payload}",
+            0.0,
+            f"wire_B={p['wire_bytes_per_device_layer']:.0f} "
+            f"exposed_B={p['exposed_bytes_per_device_layer']:.0f} "
+            f"overlap={rec['overlap_fraction']:.3f} "
+            f"compression={p['compression_vs_fp32']:.1f}x "
+            f"inter_pod_crossing_B={p['hier_crossing_bytes']:.0f}",
+        ))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_comm.json")
+    args = ap.parse_args(argv)
+    rec = write_comm_bench(args.out)
+    print(json.dumps(rec, indent=1))
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -17,6 +17,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
     args = ap.parse_args(argv)
 
+    from benchmarks.comm_bench import comm_rows
     from benchmarks.fig07_quant import fig07_quant_accuracy
     from benchmarks.kernel_bench import bench_kernels_rows, kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
@@ -49,6 +50,7 @@ def main(argv=None) -> None:
         ("tbl3", tbl3_comm_fraction),
         ("halo", halo_vs_broadcast),
         ("comm-tier", comm_tier_rows),
+        ("comm", comm_rows),
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),

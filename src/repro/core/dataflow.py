@@ -32,9 +32,11 @@ import dataclasses
 
 __all__ = [
     "DataflowCost",
+    "ExchangeCost",
     "dense_multiply_count",
     "sparse_multiply_count",
     "blocked_multiply_count",
+    "exchange_cost",
     "choose_order",
 ]
 
@@ -86,9 +88,54 @@ def blocked_multiply_count(
     return DataflowCost(aggregation_first=agg_first, feature_first=feat_first)
 
 
+@dataclasses.dataclass(frozen=True)
+class ExchangeCost:
+    """The halo-exchange wire model of docs/communication.md: per-device
+    per-layer rows crossing the fabric, compressed by the payload format and
+    hidden behind interior compute.
+
+      wire_bytes    = rows · d · payload_bits / 8        (what crosses)
+      exposed_bytes = wire_bytes · (1 − overlap_fraction) (what the critical
+                      path still waits on: the overlapped schedule hides a
+                      ``overlap_fraction`` share of the exchange behind
+                      interior aggregation work)
+    """
+
+    rows: int                         # halo rows received per device per layer
+    d: int                            # feature width crossing the wire
+    payload_bits: int = 32            # fp32 32 | bf16 16 | int8 8
+    overlap_fraction: float = 0.0     # HaloPlan.overlap_fraction()
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.rows * self.d * self.payload_bits / 8.0
+
+    @property
+    def exposed_bytes(self) -> float:
+        return self.wire_bytes * (1.0 - self.overlap_fraction)
+
+    @property
+    def compression(self) -> float:
+        """Wire-byte reduction vs the fp32 baseline (32 / payload_bits)."""
+        return 32.0 / max(self.payload_bits, 1)
+
+
+def exchange_cost(
+    rows: int, d: int, payload_bits: int = 32, overlap_fraction: float = 0.0
+) -> ExchangeCost:
+    """Convenience constructor for :class:`ExchangeCost` (dry-run accounting,
+    hillclimb prints, and the ``choose_order`` exchange term)."""
+    return ExchangeCost(
+        rows=int(rows), d=int(d), payload_bits=int(payload_bits),
+        overlap_fraction=float(overlap_fraction),
+    )
+
+
 def choose_order(
     n_nodes: int, d_in: int, d_out: int, n_edges: int | None = None,
     backend: str = "segment", nnz_blocks: int | None = None, block: int = 128,
+    halo_rows: int | None = None, payload_bits: int = 32,
+    overlap_fraction: float = 0.0,
 ) -> str:
     """COIN's rule: run X·W first iff it shrinks the aggregated width.
 
@@ -98,6 +145,15 @@ def choose_order(
     chooser is exact for any accounting; what changes between models is the
     cost *magnitude*, which the dry-run/hillclimb FLOP accounting consumes.
     Ties go to feature-first (the paper's order).
+
+    ``halo_rows`` adds the exchange term of the sharded halo schedule:
+    feature-first exchanges the transformed (d_out-wide) rows and
+    aggregation-first the raw (d_in-wide) rows, each scaled by the
+    overlap/compression model ``payload_bits/32 · (1 − overlap_fraction)``
+    (:class:`ExchangeCost`, in element-equivalents). The term moves with the
+    SAME d_out-vs-d_in sign as the compute terms, so the argmax is unchanged
+    — it exists so hillclimb and the dry-run see exchange-aware magnitudes,
+    not to flip decisions.
     """
     if backend == "bsr" and nnz_blocks is not None:
         cost = blocked_multiply_count(n_nodes, nnz_blocks, d_in, d_out, block)
@@ -105,4 +161,10 @@ def choose_order(
         cost = sparse_multiply_count(n_nodes, n_edges, d_in, d_out)
     else:
         cost = dense_multiply_count(n_nodes, d_in, d_out)
+    if halo_rows:
+        factor = (payload_bits / 32.0) * (1.0 - overlap_fraction)
+        cost = DataflowCost(
+            aggregation_first=cost.aggregation_first + halo_rows * d_in * factor,
+            feature_first=cost.feature_first + halo_rows * d_out * factor,
+        )
     return cost.best

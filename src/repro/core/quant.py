@@ -9,12 +9,21 @@ trained/evaluated at 2–32 bits, reproducing the Fig. 7 sweep.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["QuantConfig", "fake_quant", "quantize_tree"]
+__all__ = [
+    "QuantConfig",
+    "PAYLOAD_BITS",
+    "fake_quant",
+    "quantize_tree",
+    "payload_bits",
+    "quantize_payload",
+    "dequantize_payload",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,8 +55,14 @@ def fake_quant(x: jax.Array, bits: int, percentile: float | None = None) -> jax.
     else:
         # k-th largest magnitude via top_k (cheaper than a full sort; the
         # calibration statistic carries no gradient, per standard QAT).
+        # Nearest-rank percentile: the p-th percentile of n magnitudes is the
+        # ceil(p·n/100)-th smallest, i.e. the (n − ceil(p·n/100) + 1)-th
+        # largest. The old `int(n·(1−p/100))` floored to 0 for any tensor
+        # with fewer than 1/(1−p/100) elements, so k=1 == pure amax and a
+        # single outlier silently owned the whole calibration range.
         flat = jax.lax.stop_gradient(mag).reshape(-1)
-        k = max(1, int(flat.shape[0] * (1.0 - percentile / 100.0)))
+        n = int(flat.shape[0])
+        k = min(n, max(1, n - math.ceil(percentile / 100.0 * n) + 1))
         amax = jax.lax.top_k(flat, k)[0][-1]
     scale = jax.lax.stop_gradient(jnp.where(amax > 0, amax / qmax, 1.0))
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
@@ -55,11 +70,80 @@ def fake_quant(x: jax.Array, bits: int, percentile: float | None = None) -> jax.
     return x + jax.lax.stop_gradient(q - x)
 
 
-def quantize_tree(params: Any, bits: int) -> Any:
-    """Fake-quantize every float leaf of a parameter pytree."""
+def quantize_tree(params: Any, bits: int, percentile: float | None = None) -> Any:
+    """Fake-quantize every float leaf of a parameter pytree.
+
+    ``percentile`` reaches every leaf's calibration (it was silently dropped
+    before, so tree-level quantization always ran pure-amax).
+    """
     def leaf(p):
         if isinstance(p, jax.Array) and jnp.issubdtype(p.dtype, jnp.floating):
-            return fake_quant(p, bits)
+            return fake_quant(p, bits, percentile=percentile)
         return p
 
     return jax.tree_util.tree_map(leaf, params)
+
+
+# --------------------------------------------------------- halo wire payloads
+# Wire formats for the halo exchange (DESIGN.md §8, docs/communication.md
+# "Overlapped schedule"): the export block is encoded before the collective
+# and decoded on receive, so only the compressed representation crosses the
+# inter-chip fabric. Unlike fake_quant (QAT emulation in fp32), these change
+# the actual transferred dtype.
+PAYLOAD_BITS = {None: 32, "fp32": 32, "bf16": 16, "int8": 8}
+
+
+def payload_bits(payload: str | None) -> int:
+    """Wire bits per element for a halo payload format."""
+    try:
+        return PAYLOAD_BITS[payload]
+    except KeyError:
+        raise ValueError(
+            f"unknown halo payload {payload!r}; expected one of "
+            "None/'fp32', 'bf16', 'int8'"
+        ) from None
+
+
+def quantize_payload(
+    x: jax.Array, payload: str | None
+) -> tuple[jax.Array, jax.Array | None]:
+    """Encode an export block for the wire. Returns ``(wire, scale)``.
+
+    * ``None``/``"fp32"`` — identity, scale None.
+    * ``"bf16"``          — bfloat16 cast, scale None (dequant is an upcast).
+    * ``"int8"``          — symmetric per-export-block scale (amax/127); the
+                            (1, 1) fp32 scale travels alongside the payload so
+                            the receiver can decode every sender's block.
+    """
+    if payload in (None, "fp32") or x.shape[0] == 0:
+        return x, None
+    if payload == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if payload == "int8":
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return q, scale.reshape(1, 1)
+    payload_bits(payload)  # raises the canonical error
+    raise AssertionError  # pragma: no cover
+
+
+def dequantize_payload(
+    wire: jax.Array, scale: jax.Array | None, dtype=jnp.float32
+) -> jax.Array:
+    """Decode gathered wire rows back to ``dtype``.
+
+    For int8, ``scale`` holds one row per gathered export block — shape
+    (n_blocks, 1) against wire (n_blocks·s, d) — and each block is rescaled
+    by its sender's amax/127.
+    """
+    if scale is None:
+        return wire.astype(dtype)
+    n_blocks = scale.shape[0]
+    rows = wire.shape[0]
+    if n_blocks > 1 and rows:
+        per = rows // n_blocks
+        return (
+            wire.astype(dtype).reshape(n_blocks, per, -1) * scale[:, :, None]
+        ).reshape(rows, -1)
+    return wire.astype(dtype) * scale[0]

@@ -68,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant import dequantize_payload, quantize_payload
 from repro.dist.compat import ensure_shard_map
 from repro.graph.ops import aggregate
 from repro.graph.structure import blocked_adjacency
@@ -79,6 +80,7 @@ __all__ = [
     "build_halo_plan",
     "halo_exchange",
     "halo_aggregate",
+    "split_halo_aggregate",
     "hier_halo_exchange",
     "hier_halo_aggregate",
     "graph_fingerprint",
@@ -86,12 +88,15 @@ __all__ = [
     "get_halo_plan",
     "invalidate_halo_plans",
     "plan_cache_stats",
+    "reset_plan_cache_stats",
     "relocate_node_array",
     "restore_node_array",
     "node_mask",
     "PlanBlockedAdjacency",
     "plan_blocked_adjacency",
     "plan_blocked_shape",
+    "plan_split_blocked_adjacency",
+    "plan_split_blocked_shape",
 ]
 
 
@@ -246,6 +251,65 @@ class HaloPlan:
     def wire_fraction(self) -> float:
         """halo ÷ broadcast received-row ratio (< 1 ⇔ halo wins)."""
         return self.halo_rows_per_device / max(self.broadcast_rows_per_device, 1)
+
+    # ------------------------------------------- interior / boundary split
+    # Derived lazily from senders_l/edge_w/n_local and memoized on the
+    # instance — deliberately NOT stored fields, so plans reloaded from
+    # pre-overlap archives (e.g. results/halo_plan_ogb.npz) grow the split
+    # for free and no serialized format changes.
+    def _edge_locality(self) -> dict:
+        cached = self.__dict__.get("_edge_locality_cache")
+        if cached is None:
+            real = self.edge_w > 0
+            remote = self.senders_l >= self.n_local
+            mask = np.zeros((self.k, self.n_local), bool)
+            for b in range(self.k):
+                mask[b, self.receivers_l[b][real[b] & remote[b]]] = True
+            cached = {
+                "interior_edges": int((real & ~remote).sum()),
+                "boundary_edges": int((real & remote).sum()),
+                "boundary_mask": mask,
+            }
+            self.__dict__["_edge_locality_cache"] = cached
+        return cached
+
+    def boundary_row_mask(self) -> np.ndarray:
+        """(k, n_local) bool: local rows with ≥1 real halo-sender edge —
+        the rows whose aggregate depends on the exchange. The complement
+        (interior rows, zero-padding rows included) can be aggregated
+        entirely from the local block, concurrently with the collective."""
+        return self._edge_locality()["boundary_mask"]
+
+    def interior_row_mask(self) -> np.ndarray:
+        """(k, n_local) bool complement of :meth:`boundary_row_mask`."""
+        return ~self.boundary_row_mask()
+
+    def boundary_rows_per_device(self) -> np.ndarray:
+        """(k,) count of boundary rows per device."""
+        return self.boundary_row_mask().sum(axis=1)
+
+    def interior_rows_per_device(self) -> np.ndarray:
+        """(k,) count of interior rows per device (padding rows included)."""
+        return self.interior_row_mask().sum(axis=1)
+
+    @property
+    def interior_edges(self) -> int:
+        """Real edges whose sender is a local row (no wire dependence)."""
+        return self._edge_locality()["interior_edges"]
+
+    @property
+    def boundary_edges(self) -> int:
+        """Real edges whose sender is a halo row (wire-dependent)."""
+        return self._edge_locality()["boundary_edges"]
+
+    def overlap_fraction(self) -> float:
+        """Fraction of real aggregation work with NO halo dependence — the
+        interior compute available to hide the exchange behind (the
+        ``1 − overlap_fraction`` of the exposed-bytes model in
+        docs/communication.md and the dry-run `exchange` accounting)."""
+        loc = self._edge_locality()
+        total = loc["interior_edges"] + loc["boundary_edges"]
+        return loc["interior_edges"] / total if total else 0.0
 
     # -------------------------------------------------------------- device
     def device_arrays(self) -> tuple[jnp.ndarray, ...]:
@@ -449,7 +513,7 @@ def build_halo_plan(
 # (axes tuple, n_pods) pair, so flat and (pod, model) plans for one graph
 # coexist side by side and differently-podded meshes never collide.
 _PLAN_CACHE: dict[tuple[str, int, object], HaloPlan] = {}
-_PLAN_STATS = {"hits": 0, "misses": 0}
+_PLAN_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def graph_fingerprint(
@@ -564,16 +628,30 @@ def invalidate_halo_plans(graph_key: str | None = None) -> int:
     if graph_key is None:
         n = len(_PLAN_CACHE)
         _PLAN_CACHE.clear()
+        _PLAN_STATS["evictions"] += n
         return n
     victims = [key for key in _PLAN_CACHE if key[0] == graph_key]
     for key in victims:
         del _PLAN_CACHE[key]
+    _PLAN_STATS["evictions"] += len(victims)
     return len(victims)
 
 
 def plan_cache_stats() -> dict[str, int]:
-    """{'hits', 'misses', 'size'} counters (hits/misses are process-lifetime)."""
+    """{'hits', 'misses', 'evictions', 'size'} counters. hits/misses/
+    evictions accumulate since process start or the last
+    :func:`reset_plan_cache_stats`; ``size`` is the current entry count."""
     return {**_PLAN_STATS, "size": len(_PLAN_CACHE)}
+
+
+def reset_plan_cache_stats() -> None:
+    """Zero the hit/miss/eviction counters (cached plans stay resident).
+
+    Long-lived serving processes sample :func:`plan_cache_stats` per
+    reporting interval; without a reset the counters are process-lifetime
+    and interval hit rates are unrecoverable."""
+    for key in _PLAN_STATS:
+        _PLAN_STATS[key] = 0
 
 
 # ============================================================= host relayout
@@ -788,6 +866,109 @@ def plan_blocked_adjacency(plan: HaloPlan, block: int = 128) -> PlanBlockedAdjac
     return out
 
 
+def _part_edges(plan: HaloPlan, b: int, boundary: bool):
+    """Device b's real edges restricted to one locality class. Boundary
+    senders are re-based into the halo-only column space (− n_local)."""
+    s, r, w = _plan_real_edges(plan, b)
+    m = (s >= plan.n_local) if boundary else (s < plan.n_local)
+    return s[m] - (plan.n_local if boundary else 0), r[m], w[m]
+
+
+def _part_blocked(plan: HaloPlan, block: int, boundary: bool) -> PlanBlockedAdjacency:
+    n_cols = plan.neighbor_table_rows - plan.n_local if boundary else plan.n_local
+    n_cols = max(n_cols, 1)
+    nbr = max(-(-plan.n_local // block), 1)
+    per_dev = []
+    for b in range(plan.k):
+        s, r, w = _part_edges(plan, b, boundary)
+        per_dev.append(
+            blocked_adjacency(
+                max(plan.n_local, 1), np.stack([s, r]), w, block, n_col_nodes=n_cols
+            )
+        )
+    T = max(ba.max_nnzb for ba in per_dev)
+    vals = np.zeros((plan.k, nbr, T, block, block), np.float32)
+    cols = np.zeros((plan.k, nbr, T), np.int32)
+    lens = np.zeros((plan.k, nbr), np.int32)
+    for b, ba in enumerate(per_dev):
+        t = ba.max_nnzb
+        vals[b, :, :t] = ba.block_vals
+        cols[b, :, :t] = ba.block_cols
+        cols[b, :, t:] = ba.block_cols[:, -1:]   # repeat-last padding contract
+        lens[b] = ba.row_nnzb
+    return PlanBlockedAdjacency(
+        vals=vals, cols=cols, lens=lens, block=block,
+        n_rows=plan.n_local, n_cols=n_cols,
+    )
+
+
+def plan_split_blocked_adjacency(
+    plan: HaloPlan, block: int = 128
+) -> tuple[PlanBlockedAdjacency, PlanBlockedAdjacency]:
+    """The overlapped-schedule BSR pair ``(interior, boundary)``.
+
+    The combined :func:`plan_blocked_adjacency` table makes every output
+    tile read the ``[local ‖ halo]`` column space, so the whole kernel
+    waits on the exchange. Splitting by sender locality re-blocks each
+    class independently (Pallas BlockSpec index maps run for every grid
+    step, so the boundary tiles must be their own ragged table — a
+    truncated view of the combined one would still prefetch halo columns):
+
+      * ``interior`` — columns span the (n_local) local block only; its
+        ``bsr_spmm`` has no data dependence on the collective.
+      * ``boundary`` — columns span the halo-only space (senders − n_local,
+        width ``neighbor_table_rows − n_local``); its ``bsr_spmm`` consumes
+        the gathered halo block directly.
+
+    ``interior(z) + boundary(halo)`` ≡ ``combined([z ‖ halo])`` row for row
+    (every real edge lands in exactly one class). Memoized on the plan like
+    the combined table.
+    """
+    cache = plan.__dict__.setdefault("_blocked_cache", {})
+    key = ("split", block)
+    hit = cache.get(key)
+    if hit is None:
+        hit = (
+            _part_blocked(plan, block, boundary=False),
+            _part_blocked(plan, block, boundary=True),
+        )
+        cache[key] = hit
+    return hit
+
+
+def plan_split_blocked_shape(plan: HaloPlan, block: int = 128) -> dict:
+    """:func:`plan_blocked_shape` for the split pair — O(E) statistics, no
+    tiles. Returns ``{"interior": stats, "boundary": stats,
+    "overlap_fraction": f}`` so abstract dry-run cells can size the two
+    ragged tables and report how much aggregation work hides the wire.
+    """
+    out = {}
+    for name, boundary in (("interior", False), ("boundary", True)):
+        n_cols = plan.neighbor_table_rows - plan.n_local if boundary else plan.n_local
+        n_cols = max(n_cols, 1)
+        nbr = max(-(-plan.n_local // block), 1)
+        nbc = max(-(-n_cols // block), 1)
+        lens = np.zeros((plan.k, nbr), np.int64)
+        for b in range(plan.k):
+            s, r, _ = _part_edges(plan, b, boundary)
+            uniq = np.unique((r // block) * nbc + (s // block))
+            lens[b] = np.bincount(uniq // nbc, minlength=nbr)
+        T = max(int(lens.max(initial=1)), 1)
+        nnz = int(lens.sum())
+        out[name] = {
+            "block": block,
+            "n_rows": plan.n_local,
+            "n_cols": n_cols,
+            "n_block_rows": nbr,
+            "max_nnzb": T,
+            "nnz_blocks": nnz,
+            "nnz_blocks_max_device": int(lens.sum(axis=1).max(initial=0)),
+            "padded_tile_fraction": 1.0 - nnz / max(plan.k * nbr * T, 1),
+        }
+    out["overlap_fraction"] = plan.overlap_fraction()
+    return out
+
+
 # ======================================================= device collectives
 def _axis_gather(export: jnp.ndarray, axis_name: str, via: str) -> jnp.ndarray:
     """Gather every device's ``(s, d)`` export block along one named mesh
@@ -818,20 +999,48 @@ def _axis_gather(export: jnp.ndarray, axis_name: str, via: str) -> jnp.ndarray:
     return stack.reshape(k * export.shape[0], *export.shape[1:])
 
 
+def _quantized_gather(
+    export: jnp.ndarray, axis_name: str, via: str, payload: str | None
+) -> jnp.ndarray:
+    """:func:`_axis_gather` with the export block encoded for the wire.
+
+    Only the quantized representation (plus, for int8, one fp32 scale per
+    export block) crosses the fabric; the gathered rows are decoded back to
+    the compute dtype on receive, so callers see the same shapes/dtypes as
+    the fp32 path — only wire bytes change (× bits/32).
+    """
+    if payload in (None, "fp32") or export.shape[0] == 0:
+        return _axis_gather(export, axis_name, via)
+    wire, scale = quantize_payload(export, payload)
+    gathered = _axis_gather(wire, axis_name, via)
+    if scale is None:                                     # bf16: plain upcast
+        return gathered.astype(export.dtype)
+    scales = _axis_gather(scale, axis_name, via)          # (n_dev, 1) fp32
+    return dequantize_payload(gathered, scales, export.dtype)
+
+
 def halo_exchange(
-    h: jnp.ndarray, send_idx: jnp.ndarray, axis_name: str, via: str = "all_gather"
+    h: jnp.ndarray,
+    send_idx: jnp.ndarray,
+    axis_name: str,
+    via: str = "all_gather",
+    payload: str | None = None,
 ) -> jnp.ndarray:
     """Exchange boundary rows across ONE named mesh axis (inside shard_map).
 
     h        — (n_local, d) this device's block.
     send_idx — (s_max,) local rows this device exports.
+    payload  — wire format (`repro.core.quant.quantize_payload`): None/"fp32"
+               ships raw rows; "bf16"/"int8" quantize the export before the
+               collective and dequantize on receive (int8 carries one fp32
+               scale per sender block).
     Returns the (k·s_max, d) halo block: slot ``j·s_max + t`` holds row
     ``send_idx[j, t]`` of device j, for every j including self (the self
     rows are redundant but keep the indexing uniform and the shapes static).
     This is the flat schedule; hierarchical (pod, model) plans go through
     :func:`hier_halo_exchange` instead.
     """
-    return _axis_gather(h[send_idx], axis_name, via)
+    return _quantized_gather(h[send_idx], axis_name, via, payload)
 
 
 def hier_halo_exchange(
@@ -840,6 +1049,7 @@ def hier_halo_exchange(
     send_rem: jnp.ndarray,
     axes: tuple[str, str] = ("pod", "model"),
     via: str = "all_gather",
+    payload: str | None = None,
 ) -> jnp.ndarray:
     """Two-phase (pod, model) boundary exchange (inside shard_map).
 
@@ -858,11 +1068,64 @@ def hier_halo_exchange(
     ``B = s_loc + n_pods·s_rem``, in the member-block layout documented on
     :class:`HaloPlan` (slot ``m'·B + t`` ↦ intra row t of pod-mate m'; slot
     ``m'·B + s_loc + q·s_rem + t`` ↦ remote row t of device (q, m')).
+
+    ``payload`` quantizes BOTH phases' wire blocks independently. For int8
+    the relayed inter-pod rows are therefore rounded twice (dequantized
+    after phase 1, re-quantized into the phase-2 block) — the documented
+    extra hierarchical int8 error, bounded by one extra amax/127 half-step.
+    bf16 is closed under the relay (a bf16 value re-cast to bf16 is itself),
+    so the hierarchical bf16 path adds no second rounding.
     """
     pod_axis, model_axis = axes
-    inter = _axis_gather(h[send_rem], pod_axis, via)      # (n_pods·s_rem, d)
+    inter = _quantized_gather(h[send_rem], pod_axis, via, payload)
     block = jnp.concatenate([h[send_loc], inter], axis=0)  # (B, d)
-    return _axis_gather(block, model_axis, via)
+    return _quantized_gather(block, model_axis, via, payload)
+
+
+def split_halo_aggregate(
+    z: jnp.ndarray,
+    halo: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_w: jnp.ndarray,
+) -> jnp.ndarray:
+    """Interior/boundary-split aggregation over an already-gathered halo.
+
+    The serialized form ``aggregate(concat([z, halo]), …)`` makes EVERY
+    output row data-dependent on the collective that produced ``halo``.
+    Splitting the edge set by sender locality —
+
+      interior:  O_int[r] = Σ_{s < n_local}  w · z[s]        (no wire dep)
+      boundary:  O_bnd[r] = Σ_{s ≥ n_local}  w · halo[s−n_local]
+
+    — leaves the interior term a pure function of the local block, so XLA's
+    latency-hiding scheduler is free to run it WHILE the exchange is in
+    flight and only the (small) boundary term waits on the wire; that is
+    the overlapped schedule of docs/communication.md. Masked weights (not
+    gathered subsets) keep shapes static: each edge contributes to exactly
+    one term, so interior + boundary ≡ the serialized sum exactly (padding
+    edges carry w == 0 and vanish from both).
+    """
+    n_local = z.shape[0]
+    if halo.shape[0] == 0:
+        return aggregate(
+            z, jnp.minimum(senders, n_local - 1), receivers, n_local, edge_w
+        )
+    remote = senders >= n_local
+    zero = jnp.zeros((), edge_w.dtype)
+    w_int = jnp.where(remote, zero, edge_w)
+    w_bnd = jnp.where(remote, edge_w, zero)
+    interior = aggregate(
+        z, jnp.minimum(senders, n_local - 1), receivers, n_local, w_int
+    )
+    boundary = aggregate(
+        halo,
+        jnp.clip(senders - n_local, 0, halo.shape[0] - 1),
+        receivers,
+        n_local,
+        w_bnd,
+    )
+    return interior + boundary
 
 
 def halo_aggregate(
@@ -873,6 +1136,8 @@ def halo_aggregate(
     edge_w: jnp.ndarray,
     axis_name: str,
     via: str = "all_gather",
+    payload: str | None = None,
+    overlap: bool = False,
 ) -> jnp.ndarray:
     """One distributed weighted aggregation O[r] = Σ w · Z[s] (per device).
 
@@ -887,8 +1152,13 @@ def halo_aggregate(
     Returns the (n_local, d) aggregate. Exactly equals the global
     ``repro.graph.ops.aggregate`` on the permuted layout (the subprocess
     equivalence test): padding edges carry weight 0 and drop out of the sum.
+    ``payload`` quantizes the wire (see :func:`halo_exchange`); ``overlap``
+    routes through :func:`split_halo_aggregate` so interior compute hides
+    the collective — bit-identical terms, reordered schedule.
     """
-    halo = halo_exchange(z, send_idx, axis_name, via=via)
+    halo = halo_exchange(z, send_idx, axis_name, via=via, payload=payload)
+    if overlap:
+        return split_halo_aggregate(z, halo, senders, receivers, edge_w)
     full = jnp.concatenate([z, halo], axis=0)             # [local ‖ halo]
     return aggregate(full, senders, receivers, z.shape[0], edge_w)
 
@@ -902,11 +1172,16 @@ def hier_halo_aggregate(
     edge_w: jnp.ndarray,
     axes: tuple[str, str] = ("pod", "model"),
     via: str = "all_gather",
+    payload: str | None = None,
+    overlap: bool = False,
 ) -> jnp.ndarray:
     """:func:`halo_aggregate` over the two-phase (pod, model) exchange: the
     ``senders`` here must come from a hierarchical plan (they index the
     member-block table of :func:`hier_halo_exchange`, < n_local + k_model·B).
+    ``payload``/``overlap`` behave as on :func:`halo_aggregate`.
     """
-    halo = hier_halo_exchange(z, send_loc, send_rem, axes, via=via)
+    halo = hier_halo_exchange(z, send_loc, send_rem, axes, via=via, payload=payload)
+    if overlap:
+        return split_halo_aggregate(z, halo, senders, receivers, edge_w)
     full = jnp.concatenate([z, halo], axis=0)             # [local ‖ halo]
     return aggregate(full, senders, receivers, z.shape[0], edge_w)

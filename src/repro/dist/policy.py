@@ -56,6 +56,10 @@ class ShardingPolicy:
     halo_send_loc: Any = None          # (s_loc,) intra-pod export rows and
     halo_send_rem: Any = None          # (s_rem,) inter-pod export rows —
                                        # the hierarchical pair bind_halo binds
+    halo_payload: str | None = None    # wire format: None/"fp32" | "bf16" |
+                                       # "int8" (repro.core.quant payloads)
+    halo_overlap: bool = True          # split interior/boundary aggregation
+                                       # so compute hides the collective
 
     def spec(self, name: str) -> PartitionSpec | None:
         """The PartitionSpec registered for ``name`` (None if unconstrained)."""
@@ -144,18 +148,30 @@ class ShardingPolicy:
         """
         if not self.is_halo:
             return x
+        return jax.numpy.concatenate([x, self.halo_block(x)], axis=0)
+
+    def halo_block(self, x: jax.Array) -> jax.Array:
+        """Just the exchanged halo rows of :meth:`neighbor_table` (armed halo
+        only) — the overlapped schedule consumes this directly: the boundary
+        aggregation term reads the halo block while interior terms read ``x``,
+        so the collective is off the interior critical path
+        (``repro.dist.halo.split_halo_aggregate``, docs/communication.md).
+        The wire is encoded per :attr:`halo_payload` and decoded here, so
+        callers always see ``x.dtype`` rows."""
         if self.halo_send_loc is not None:
             from repro.dist.halo import hier_halo_exchange
 
             axes = self.halo_axes or ("pod", self.halo_axis)
-            halo = hier_halo_exchange(
-                x, self.halo_send_loc, self.halo_send_rem, axes, via=self.halo_via
+            return hier_halo_exchange(
+                x, self.halo_send_loc, self.halo_send_rem, axes,
+                via=self.halo_via, payload=self.halo_payload,
             )
-        else:
-            from repro.dist.halo import halo_exchange
+        from repro.dist.halo import halo_exchange
 
-            halo = halo_exchange(x, self.halo_send_idx, self.halo_axis, via=self.halo_via)
-        return jax.numpy.concatenate([x, halo], axis=0)
+        return halo_exchange(
+            x, self.halo_send_idx, self.halo_axis,
+            via=self.halo_via, payload=self.halo_payload,
+        )
 
 
 #: The unsharded singleton: every ``constrain`` is the identity.

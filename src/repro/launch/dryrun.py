@@ -141,11 +141,27 @@ def exchange_accounting(cell, shape) -> dict | None:
     roofline see the real blocked compute cost next to the wire cost. Cells
     without a plan (non-GNN, sampled, or forced-broadcast) return just the
     comm tag.
+
+    The overlap/compression model (`repro.core.dataflow.ExchangeCost`,
+    docs/communication.md "Overlapped schedule") is reported alongside:
+    ``halo_wire_bytes_per_exchange`` is what crosses the fabric under the
+    cell's payload format (× bits/32 vs the fp32 total) and
+    ``halo_exposed_bytes_per_exchange`` what the critical path still waits
+    on (× (1 − overlap_fraction)) — exposed < total whenever the overlapped
+    schedule and/or a quantized payload is active.
     """
     plan = getattr(cell, "halo_plan", None)
     if plan is None:
         return {"comm": cell.comm} if getattr(cell, "comm", None) else None
+    from repro.core.dataflow import exchange_cost
+    from repro.core.quant import payload_bits
+
     d = shape.d_feat or 0
+    payload = getattr(cell, "halo_payload", None)
+    bits = payload_bits(payload)
+    overlap = bool(getattr(cell, "halo_overlap", False))
+    ov_frac = plan.overlap_fraction() if overlap else 0.0
+    ec = exchange_cost(plan.halo_rows_per_device, d, bits, ov_frac)
     out = {
         "comm": cell.comm,
         "halo_rows_per_device": plan.halo_rows_per_device,
@@ -153,6 +169,15 @@ def exchange_accounting(cell, shape) -> dict | None:
         "wire_fraction": plan.wire_fraction(),
         "halo_bytes_per_exchange": plan.halo_rows_per_device * d * 4,
         "broadcast_bytes_per_exchange": plan.broadcast_rows_per_device * d * 4,
+        "payload": payload or "fp32",
+        "payload_bits": bits,
+        "payload_compression": ec.compression,
+        "overlap": overlap,
+        "overlap_fraction": ov_frac,
+        "halo_wire_bytes_per_exchange": ec.wire_bytes,
+        "halo_exposed_bytes_per_exchange": ec.exposed_bytes,
+        "boundary_rows_max_device": int(plan.boundary_rows_per_device().max(initial=0)),
+        "interior_rows_min_device": int(plan.interior_rows_per_device().min(initial=0)),
     }
     if getattr(cell, "bsr_stats", None):
         out["bsr"] = dict(cell.bsr_stats)
@@ -172,7 +197,7 @@ def exchange_accounting(cell, shape) -> dict | None:
 
 def run_cell(
     arch_id: str, shape_name: str, multi_pod: bool, verbose: bool = True,
-    optimized: bool = False, comm: str | None = None,
+    optimized: bool = False, comm: str | None = None, payload: str | None = None,
 ) -> dict:
     import jax
 
@@ -187,7 +212,8 @@ def run_cell(
         "shape": shape_name,
         "mesh": ("2x16x16" if multi_pod else "16x16")
         + ("+opt" if optimized else "")
-        + (f"+{comm}" if comm else ""),
+        + (f"+{comm}" if comm else "")
+        + (f"+{payload}" if payload else ""),
         "ts": time.time(),
     }
     if shape.skip_reason:
@@ -197,7 +223,7 @@ def run_cell(
     n_chips = mesh.devices.size
     try:
         t0 = time.time()
-        cell = build_cell(spec, shape, mesh, optimized=optimized, comm=comm)
+        cell = build_cell(spec, shape, mesh, optimized=optimized, comm=comm, payload=payload)
         lowered = cell.lower(mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -296,10 +322,18 @@ def main(argv=None) -> int:
                          "a '+broadcast' mesh tag. GNN records produced before "
                          "the halo default landed measured the broadcast "
                          "schedule — re-run them with --force.")
+    ap.add_argument("--payload", choices=["fp32", "bf16", "int8"], default="fp32",
+                    help="halo wire payload format (docs/communication.md "
+                         "'Overlapped schedule'). 'fp32' IS the default (same "
+                         "records, no tag suffix); 'bf16'/'int8' quantize the "
+                         "boundary rows on the wire and record under a "
+                         "'+bf16'/'+int8' mesh tag. Halo GNN cells only.")
     args = ap.parse_args(argv)
     # "halo" is the default schedule: map both spellings to comm=None so the
     # identical computation never gets cached twice under different tags.
     comm = "broadcast" if args.comm == "broadcast" else None
+    # Same idea for the payload: fp32 is the default wire format.
+    payload = None if args.payload == "fp32" else args.payload
 
     from repro.configs import get_arch, ASSIGNED_ARCHS
 
@@ -317,12 +351,16 @@ def main(argv=None) -> int:
                     ("2x16x16" if multi else "16x16")
                     + ("+opt" if args.optimized else "")
                     + (f"+{comm}" if comm else "")
+                    + (f"+{payload}" if payload else "")
                 )
                 key = (arch_id, shape_name, mesh_tag)
                 if key in done and not args.force:
                     print(f"[cached] {key}")
                     continue
-                rec = run_cell(arch_id, shape_name, multi, optimized=args.optimized, comm=comm)
+                rec = run_cell(
+                    arch_id, shape_name, multi,
+                    optimized=args.optimized, comm=comm, payload=payload,
+                )
                 records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
                 records.append(rec)
                 _save(args.out, records)

@@ -191,12 +191,14 @@ def target2_granite() -> list[dict]:
 
 
 # =========================================== target 3: PNA broadcast → halo
-def _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=None):
+def _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=None, payload=None):
     """Train cell for PNA over the halo plan (shard_map core).
 
     compute_dtype=bf16 (t3-b) casts features/messages for the exchange and
     the edge math — halves both the wire bytes and the dominant (E, ·)
-    intermediate traffic; params/optimizer stay fp32."""
+    intermediate traffic; params/optimizer stay fp32. payload="bf16"/"int8"
+    (t3-c) instead quantizes ONLY the wire (dequantized on receive,
+    repro.core.quant payloads) — compute stays at compute_dtype."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -243,7 +245,7 @@ def _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=None):
         amp = logd / cfg.mean_log_degree
         att = cfg.mean_log_degree / jnp.maximum(logd, 1e-6)
         for i in range(cfg.n_layers):
-            halo = halo_exchange(h, send_idx, "model")
+            halo = halo_exchange(h, send_idx, "model", payload=payload)
             full = jnp.concatenate([h, halo], axis=0)
             msg_in = jnp.concatenate([full[senders], h[receivers]], axis=-1)
             msg = jax.nn.relu(linear(params[f"pre{i}"], msg_in)) * (edge_w > 0)[:, None]
@@ -281,7 +283,10 @@ def _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=None):
         (p_shard, o_shard, b_shard),
         (p_shard, o_shard, sh.named(mesh, P())),
         model_flops=0.0,
-        note=f"halo s_max={plan.s_max} n_local={plan.n_local}",
+        note=f"halo s_max={plan.s_max} n_local={plan.n_local}"
+        + (f" payload={payload}" if payload else ""),
+        halo_plan=plan,
+        halo_payload=payload,
     )
 
 
@@ -356,6 +361,33 @@ def target3_pna() -> list[dict]:
     cell_b = _pna_halo_cell(mesh, plan, cfg, shape, compute_dtype=jnp.bfloat16)
     cell_b.model_flops = _gnn_flops("pna", shape, cfg) * 3.0
     out.append(_measure(cell_b, mesh, "t3-b halo + bf16 edge math"))
+
+    print("  iteration: the residual collective term is the per-layer halo"
+          " gather itself. hypothesis: quantizing just the WIRE to bf16"
+          " (dequantized on receive, repro.core.quant payloads) halves the"
+          " exchange bytes without touching the fp32 edge math — and the"
+          " overlapped schedule hides the rest behind interior aggregation"
+          " (docs/communication.md 'Overlapped schedule').")
+    from repro.core.dataflow import exchange_cost
+
+    d = shape.d_feat or cfg.d_in
+    for bits, tag in ((32, "fp32"), (16, "bf16")):
+        ec = exchange_cost(plan.halo_rows_per_device, d, bits, plan.overlap_fraction())
+        print(f"  exchange model [{tag}]: wire={ec.wire_bytes/1e6:.1f}MB/layer"
+              f" exposed={ec.exposed_bytes/1e6:.1f}MB/layer"
+              f" (overlap_fraction={plan.overlap_fraction():.3f},"
+              f" compression={ec.compression:.0f}x)")
+    cell_c = _pna_halo_cell(mesh, plan, cfg, shape, payload="bf16")
+    cell_c.model_flops = _gnn_flops("pna", shape, cfg) * 3.0
+    rec_c = _measure(cell_c, mesh, "t3-c halo + bf16 wire payload")
+    ec = exchange_cost(plan.halo_rows_per_device, d, 16, plan.overlap_fraction())
+    rec_c["exchange_model"] = {
+        "wire_bytes_per_layer": ec.wire_bytes,
+        "exposed_bytes_per_layer": ec.exposed_bytes,
+        "overlap_fraction": ec.overlap_fraction,
+        "compression": ec.compression,
+    }
+    out.append(rec_c)
     return out
 
 

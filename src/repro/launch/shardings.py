@@ -129,15 +129,22 @@ def replicated_specs(param_tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda leaf: P(*([None] * len(leaf.shape))), param_tree)
 
 
-def gnn_policy(mesh, batched: bool, comm: str = "halo") -> ShardingPolicy:
+def gnn_policy(
+    mesh, batched: bool, comm: str = "halo",
+    halo_payload: str | None = None, halo_overlap: bool = True,
+) -> ShardingPolicy:
     """GNN activation policy. ``comm`` selects the full-graph communication
     schedule (DESIGN.md §8): "halo" (default — boundary-only exchange over a
     HaloPlan, inside shard_map) or "broadcast" (the paper's Fig. 5c layer-
     output all-gather via pjit sharding propagation, kept as the escape
     hatch). On a mesh with a ``pod`` tier the halo policy carries
     ``halo_axes=("pod", "model")`` so ``neighbor_table`` runs the two-phase
-    hierarchical exchange (docs/communication.md). Batched (sampled-block)
-    cells have no cross-shard edges, so the mode is irrelevant there."""
+    hierarchical exchange (docs/communication.md). ``halo_payload`` selects
+    the wire format (bf16/int8 quantized payloads, dequantized on receive)
+    and ``halo_overlap`` the interior/boundary-split schedule that hides the
+    collective behind interior aggregation — both per docs/communication.md
+    "Overlapped schedule". Batched (sampled-block) cells have no cross-shard
+    edges, so the mode is irrelevant there."""
     from repro.launch.mesh import halo_axes
 
     da = data_axes(mesh)
@@ -159,6 +166,7 @@ def gnn_policy(mesh, batched: bool, comm: str = "halo") -> ShardingPolicy:
         return ShardingPolicy(
             mesh=mesh, specs={}, comm="halo", halo_axis="model",
             halo_axes=ha if len(ha) > 1 else None,
+            halo_payload=halo_payload, halo_overlap=halo_overlap,
         )
     return ShardingPolicy(
         mesh=mesh,

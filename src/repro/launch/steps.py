@@ -82,7 +82,14 @@ class Cell:
     # padded-tile fraction) — the dry-run reports them in the `exchange`
     # record and `model_flops` is computed from the blocked cost model
     # (nnz_blocks·B²·F, repro.core.dataflow) instead of the edge count.
+    # Halo cells carry the split record of `plan_split_blocked_shape`
+    # ("interior"/"boundary" sub-dicts + combined top-level keys).
     bsr_stats: dict | None = None
+    # Halo cells: the wire payload format (None/"fp32" | "bf16" | "int8")
+    # and whether the interior/boundary-split overlapped schedule is on —
+    # the dry-run's exchange accounting reads both (ExchangeCost).
+    halo_payload: str | None = None
+    halo_overlap: bool = False
 
     def lower(self, mesh):
         jitted = jax.jit(
@@ -485,9 +492,16 @@ def _gnn_halo_device_loss(arch_id: str, cfg):
                 (b["bsr_vals"], b["bsr_cols"], b["bsr_lens"])
                 if "bsr_vals" in b else None
             )
+            # Split pair (interior adjacency above + boundary tables below):
+            # the overlapped schedule — interior tiles aggregate the local
+            # block while the boundary tables consume the halo exchange.
+            adjacency_boundary = (
+                (b["bsr_bvals"], b["bsr_bcols"], b["bsr_blens"])
+                if "bsr_bvals" in b else None
+            )
             logits = gcn_forward(
                 params, b["feats"], b["senders"], b["receivers"], b["edge_w"], cfg, pol,
-                adjacency=adjacency,
+                adjacency=adjacency, adjacency_boundary=adjacency_boundary,
             ).astype(F32)
             lse = jax.scipy.special.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, b["labels"][:, None], axis=-1)[:, 0]
@@ -534,8 +548,11 @@ def _gnn_halo_batch_abstract(
     (k, n_local, …), per-edge arrays (k, e_local, …), plus the plan tables
     (flat: send_idx; hierarchical: the send_loc/send_rem tier pair).
     ``backend="bsr"`` GCN cells additionally carry the per-shard blocked
-    adjacency triple, sized by `repro.dist.halo.plan_blocked_shape` so no
-    tile is ever materialized for abstract cells."""
+    adjacency tables, sized by `repro.dist.halo.plan_split_blocked_shape`
+    (an interior triple over local columns plus a boundary triple over the
+    halo-only columns — the overlapped schedule's pair) so no tile is ever
+    materialized for abstract cells. A legacy single-table record (no
+    "interior" key, `plan_blocked_shape`) sizes just the combined triple."""
     k, n_local, e_local = plan.k, plan.n_local, plan.e_local
     if plan.is_hierarchical:
         sloc, srem, sl, rl, ew = plan.abstract_inputs()
@@ -556,10 +573,16 @@ def _gnn_halo_batch_abstract(
         batch["edge_feats"] = _sds((k, e_local, cfg.d_edge_in), F32)
     if arch_id == "coin_gcn":
         if bsr_stats is not None:
-            R, T, B = bsr_stats["n_block_rows"], bsr_stats["max_nnzb"], bsr_stats["block"]
-            batch["bsr_vals"] = _sds((k, R, T, B, B), F32)
-            batch["bsr_cols"] = _sds((k, R, T), I32)
-            batch["bsr_lens"] = _sds((k, R), I32)
+            if "interior" in bsr_stats:
+                parts = (("interior", "bsr_"), ("boundary", "bsr_b"))
+                tables = [(bsr_stats[tag], prefix) for tag, prefix in parts]
+            else:
+                tables = [(bsr_stats, "bsr_")]
+            for st, prefix in tables:
+                R, T, B = st["n_block_rows"], st["max_nnzb"], st["block"]
+                batch[prefix + "vals"] = _sds((k, R, T, B, B), F32)
+                batch[prefix + "cols"] = _sds((k, R, T), I32)
+                batch[prefix + "lens"] = _sds((k, R), I32)
         batch["labels"] = _sds((k, n_local), I32)
         batch["label_mask"] = _sds((k, n_local), F32)
     else:
@@ -570,7 +593,8 @@ def _gnn_halo_batch_abstract(
 
 
 def _gnn_halo_cell(
-    spec: ArchSpec, shape: ShapeSpec, mesh, cfg, cost_cells, dtype=F32
+    spec: ArchSpec, shape: ShapeSpec, mesh, cfg, cost_cells, dtype=F32,
+    payload: str | None = None,
 ) -> Cell:
     """Full-graph GNN train cell over the halo schedule (the default path).
 
@@ -582,6 +606,14 @@ def _gnn_halo_cell(
     tier the graph shards over (pod, model) jointly and the exchange is the
     two-phase hierarchical collective — only deduplicated remote rows cross
     the inter-pod fabric (docs/communication.md).
+
+    ``payload`` quantizes the wire (bf16/int8, dequantized on receive) and
+    the coin_gcn cell runs the overlapped schedule: segment backend via the
+    interior/boundary split aggregation, bsr backend via the split blocked
+    tables of `plan_split_blocked_adjacency` — either way layer ℓ's
+    boundary collective is consumed only by the boundary term, so XLA's
+    latency-hiding scheduler overlaps it with interior compute
+    (docs/communication.md "Overlapped schedule").
     """
     from repro.launch.mesh import halo_axes
 
@@ -592,12 +624,26 @@ def _gnn_halo_cell(
     spec_axes = axes if hier else "model"
     n_raw, e_raw = _gnn_sizes(shape, pad_mult=1)
     plan = _shape_halo_plan(n_raw, e_raw, k, pods)
-    policy = sh.gnn_policy(mesh, batched=False, comm="halo")
+    policy = sh.gnn_policy(mesh, batched=False, comm="halo", halo_payload=payload)
     bsr_stats = None
     if spec.arch_id == "coin_gcn" and getattr(cfg, "backend", "segment") == "bsr":
-        from repro.dist.halo import plan_blocked_shape
+        from repro.dist.halo import plan_split_blocked_shape
 
-        bsr_stats = plan_blocked_shape(plan)
+        split = plan_split_blocked_shape(plan)
+        st_i, st_b = split["interior"], split["boundary"]
+        nnzb = st_i["nnz_blocks"] + st_b["nnz_blocks"]
+        grid = k * (
+            st_i["n_block_rows"] * st_i["max_nnzb"]
+            + st_b["n_block_rows"] * st_b["max_nnzb"]
+        )
+        bsr_stats = {
+            "block": st_i["block"],
+            "nnz_blocks": nnzb,
+            "padded_tile_fraction": 1.0 - nnzb / max(grid, 1),
+            "overlap_fraction": split["overlap_fraction"],
+            "interior": st_i,
+            "boundary": st_b,
+        }
 
     params_abs = _gnn_params(spec.arch_id, cfg, dtype)
     p_specs = sh.replicated_specs(params_abs)
@@ -649,8 +695,12 @@ def _gnn_halo_cell(
     if bsr_stats is not None:
         note += (
             f" bsr nnzb={bsr_stats['nnz_blocks']}"
+            f" (int={bsr_stats['interior']['nnz_blocks']}"
+            f" bnd={bsr_stats['boundary']['nnz_blocks']})"
             f" padfrac={bsr_stats['padded_tile_fraction']:.2f}"
         )
+    if payload:
+        note += f" payload={payload}"
     return Cell(
         spec.arch_id, shape.name, "train_step",
         train_step,
@@ -663,12 +713,15 @@ def _gnn_halo_cell(
         comm="halo",
         halo_plan=plan,
         bsr_stats=bsr_stats,
+        halo_payload=payload,
+        halo_overlap=policy.halo_overlap,
     )
 
 
 def _gnn_cell(
     spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32,
     _as_cost_cell: bool = False, comm: str | None = None, optimized: bool = False,
+    payload: str | None = None,
 ) -> Cell:
     import dataclasses as dc
 
@@ -703,7 +756,7 @@ def _gnn_cell(
     if comm is None:
         comm = "broadcast" if sampled else "halo"
     if not sampled and comm == "halo":
-        return _gnn_halo_cell(spec, shape, mesh, cfg, cost_cells, dtype)
+        return _gnn_halo_cell(spec, shape, mesh, cfg, cost_cells, dtype, payload=payload)
     n_blocks = n_data if sampled else None
     policy = NO_POLICY if sampled else sh.gnn_policy(mesh, batched=False, comm="broadcast")
 
@@ -842,7 +895,7 @@ def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, dtype=F32) -> Cell:
 # ==================================================================== factory
 def build_cell(
     spec: ArchSpec, shape: ShapeSpec, mesh, optimized: bool = False,
-    comm: str | None = None,
+    comm: str | None = None, payload: str | None = None,
 ) -> Cell:
     """optimized=True applies the §Perf findings (hierarchical MoE dispatch,
     remat on train, param/opt/cache donation) — the beyond-paper variants
@@ -853,12 +906,14 @@ def build_cell(
     "broadcast" → the paper-faithful layer-output all-gather escape hatch.
     Non-GNN families ignore it. For coin_gcn full-graph cells optimized=True
     also switches the aggregation to ``backend="bsr"`` (the ragged blocked
-    MXU kernel, with the per-shard blocked adjacency threaded through the
-    halo batch)."""
+    MXU kernel, with the per-shard split blocked adjacency threaded through
+    the halo batch). payload selects the halo wire format (None/"fp32" |
+    "bf16" | "int8" — quantized boundary rows, dequantized on receive;
+    docs/communication.md "Overlapped schedule"); halo cells only."""
     if spec.family == "lm":
         return _lm_cell(spec, shape, mesh, optimized=optimized)
     if spec.family == "gnn":
-        return _gnn_cell(spec, shape, mesh, comm=comm, optimized=optimized)
+        return _gnn_cell(spec, shape, mesh, comm=comm, optimized=optimized, payload=payload)
     if spec.family == "recsys":
         return _recsys_cell(spec, shape, mesh)
     raise KeyError(spec.family)

@@ -31,6 +31,19 @@ slice) and each layer's aggregation runs on the MXU kernel —
 aggregation-first layers stay fully fused; feature-first layers exchange
 the transformed Z between the X·W matmul and the blocked aggregation (the
 collective cannot be fused through).
+
+**Overlapped schedule** (docs/communication.md): with ``policy.halo_overlap``
+(segment backend) or an ``adjacency_boundary`` split pair from
+`repro.dist.halo.plan_split_blocked_adjacency` (bsr backend), each layer's
+aggregation splits into an interior term that reads only the local block and
+a boundary term that alone consumes the collective — XLA's latency-hiding
+scheduler runs interior tiles while the exchange is in flight, and across
+layers the next layer's exchange issues against the previous layer's
+interior compute (double-buffering expressed as dataflow independence, not
+manual scheduling). ``policy.halo_payload`` quantizes the wire (bf16/int8
+via `repro.core.quant.quantize_payload`, dequantized on receive; the fused
+aggregation-first path feeds bf16 rows straight into the fp32-accumulating
+MXU kernel — in-kernel dequant).
 """
 from __future__ import annotations
 
@@ -42,6 +55,7 @@ import numpy as np
 
 from repro.core.dataflow import choose_order
 from repro.core.quant import QuantConfig, fake_quant
+from repro.dist.halo import split_halo_aggregate
 from repro.dist.policy import NO_POLICY, ShardingPolicy
 from repro.graph.ops import aggregate, aggregate_padded
 from repro.graph.structure import BlockedAdjacency
@@ -127,11 +141,19 @@ def _normalize_adjacency(adjacency):
     )
 
 
-def _validate_backend_args(cfg: GCNConfig, policy: ShardingPolicy, adjacency, dense_adj):
+def _validate_backend_args(
+    cfg: GCNConfig, policy: ShardingPolicy, adjacency, dense_adj, adjacency_boundary
+):
     """Up-front argument validation with actionable errors (not asserts)."""
     if cfg.backend not in ("segment", "bsr", "dense"):
         raise ValueError(
             f"unknown GCN backend {cfg.backend!r}; expected 'segment', 'bsr', or 'dense'"
+        )
+    if adjacency_boundary is not None and not (cfg.backend == "bsr" and policy.is_halo):
+        raise ValueError(
+            "adjacency_boundary is the overlapped halo-bsr split "
+            "(repro.dist.halo.plan_split_blocked_adjacency) and requires "
+            "backend='bsr' under an armed halo policy"
         )
     if cfg.backend == "dense":
         if policy.is_halo:
@@ -162,23 +184,48 @@ def gcn_forward(
     policy: ShardingPolicy = NO_POLICY,
     adjacency=None,                        # BlockedAdjacency (or arrays) for "bsr"
     dense_adj: jnp.ndarray | None = None,  # (N, N) for "dense"
+    adjacency_boundary=None,               # halo-bsr overlap: the boundary
+                                           # table of plan_split_blocked_adjacency
+                                           # (adjacency= is then the interior one)
 ) -> jnp.ndarray:
     n_nodes = x.shape[0]
     n_edges = int(senders.shape[0])
     q = cfg.quant
-    adj = _validate_backend_args(cfg, policy, adjacency, dense_adj)
+    adj = _validate_backend_args(cfg, policy, adjacency, dense_adj, adjacency_boundary)
     vals, cols, lens, nnz_blocks, block = adj if adj is not None else (None,) * 4 + (128,)
+    adj_b = (
+        _normalize_adjacency(adjacency_boundary)
+        if adjacency_boundary is not None
+        else None
+    )
+    if adj_b is not None and nnz_blocks is not None and adj_b[3] is not None:
+        nnz_blocks = nnz_blocks + adj_b[3]     # chooser sees the combined work
     # Unsharded bsr runs the whole layer in one fused pallas_call; under halo
     # only aggregation-first layers can fuse (the boundary collective sits
     # between X·W and the aggregation on feature-first layers).
     fused = cfg.backend == "bsr" and not policy.is_halo
+    overlap = policy.is_halo and policy.halo_overlap
 
     def agg(z: jnp.ndarray) -> jnp.ndarray:
         if policy.is_halo:
             # Halo mode (DESIGN.md §8): senders index [local ‖ halo]; padding
             # edges carry weight 0 so no ghost row is needed.
             if cfg.backend == "bsr":
+                if adj_b is not None:
+                    # Overlapped split (docs/communication.md): the interior
+                    # SpMM reads only the local block, so it has no data
+                    # dependence on the collective producing `halo` and runs
+                    # while the exchange is in flight.
+                    b_vals, b_cols, b_lens = adj_b[0], adj_b[1], adj_b[2]
+                    halo = policy.halo_block(z)
+                    interior = bsr_spmm(vals, cols, z, lens=lens)[:n_nodes]
+                    boundary = bsr_spmm(b_vals, b_cols, halo, lens=b_lens)[:n_nodes]
+                    return interior + boundary
                 return bsr_spmm(vals, cols, policy.neighbor_table(z), lens=lens)[:n_nodes]
+            if overlap:
+                return split_halo_aggregate(
+                    z, policy.halo_block(z), senders, receivers, edge_weight
+                )
             return aggregate(policy.neighbor_table(z), senders, receivers, n_nodes, edge_weight)
         if cfg.backend == "segment":
             return aggregate_padded(z, senders, receivers, n_nodes, edge_weight)
@@ -199,10 +246,20 @@ def gcn_forward(
             h = fused_gcn_layer(
                 vals, cols, lens, h, w, params[f"b{i}"], order=order, relu=not last
             )[:n_nodes]
-        elif cfg.backend == "bsr" and policy.is_halo and order == "aggregation_first":
+        elif (
+            cfg.backend == "bsr" and policy.is_halo
+            and order == "aggregation_first" and adj_b is None
+        ):
             # Exchange h, then one fused (Ã·table)·W + b + act pallas_call.
+            # With a bf16 wire payload the table rows enter the kernel in
+            # bf16 and the fp32 MXU accumulation IS the dequant (in-kernel);
+            # split-table layers (adj_b) take the overlapped agg() path
+            # above instead.
+            table = policy.neighbor_table(h)
+            if policy.halo_payload == "bf16":
+                table = table.astype(jnp.bfloat16)
             h = fused_gcn_layer(
-                vals, cols, lens, policy.neighbor_table(h), w, params[f"b{i}"],
+                vals, cols, lens, table, w, params[f"b{i}"],
                 order="aggregation_first", relu=not last,
             )[:n_nodes]
         else:

@@ -308,11 +308,26 @@ class HotNeighborCache:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
-    def lookup(self, node: int, layer: int) -> np.ndarray | None:
+    def peek(self, node: int, layer: int) -> np.ndarray | None:
+        """Non-counting read. Engine-internal re-reads of an entry the
+        sampler already counted — the injection copy in
+        ``GraphBatcher.step`` — go through here so ``stats()["hits"]``
+        counts each serving hit exactly once."""
         e = self._entries.get(node)
         if e is None:
             return None
         return e.get(layer)
+
+    def lookup(self, node: int, layer: int) -> np.ndarray | None:
+        """Counting read: exactly one hit or miss per call, tallied HERE and
+        nowhere else (the batcher must not re-add per-block counts on top —
+        that double-counting inflated ``hit_rate``)."""
+        val = self.peek(node, layer)
+        if val is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return val
 
     def admit(self, node: int, layer: int, value: np.ndarray) -> bool:
         e = self._entries.get(node)
@@ -568,7 +583,8 @@ class GraphBatcher:
             v = np.zeros((self.max_nodes, self._inject_dims[layer]), np.float32)
             for lc, node in blk.inject.get(layer, []):
                 m[lc] = 1.0
-                v[lc] = self.cache.lookup(node, layer)
+                # peek, not lookup: the sampler already counted this hit.
+                v[lc] = self.cache.peek(node, layer)
             masks.append(jnp.asarray(m))
             vals.append(jnp.asarray(v))
         out, inter = self._fwd(
@@ -592,16 +608,18 @@ class GraphBatcher:
             inter = [np.asarray(a) for a in inter]
             for layer, lc, node in blk.harvest:
                 self.cache.admit(node, layer, inter[layers.index(layer)][lc].copy())
-            self.cache.hits += blk.cache_hits
-            self.cache.misses += blk.cache_misses
-            feat_bytes = 4 * self.features.shape[1]
+            # Hits/misses were tallied by cache.lookup during sampling —
+            # re-adding blk.cache_hits here would count every hit twice.
+            feat_bytes = self.features.dtype.itemsize * self.features.shape[1]
             for layer, pairs in blk.inject.items():
                 rows, edges = self.sampler.subtree_counts(layer)
-                for _lc, _node in pairs:
-                    self.cache.record_saving(
-                        rows, edges,
-                        rows * feat_bytes - 4 * self._inject_dims[layer],
+                for _lc, node in pairs:
+                    row = self.cache.peek(node, layer)
+                    inj_bytes = (
+                        row.nbytes if row is not None
+                        else self.features.dtype.itemsize * self._inject_dims[layer]
                     )
+                    self.cache.record_saving(rows, edges, rows * feat_bytes - inj_bytes)
         if self.partition is not None:
             parts = self.partition.assignment[valid]
             major = int(self.partition.assignment[seeds[0]])

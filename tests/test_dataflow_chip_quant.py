@@ -6,8 +6,20 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chip import ChipModel, chips_required
-from repro.core.dataflow import choose_order, dense_multiply_count, sparse_multiply_count
-from repro.core.quant import QuantConfig, fake_quant
+from repro.core.dataflow import (
+    choose_order,
+    dense_multiply_count,
+    exchange_cost,
+    sparse_multiply_count,
+)
+from repro.core.quant import (
+    QuantConfig,
+    dequantize_payload,
+    fake_quant,
+    payload_bits,
+    quantize_payload,
+    quantize_tree,
+)
 
 
 def test_nell_311x_reduction():
@@ -90,3 +102,123 @@ def test_fake_quant_error_bound(bits, seed):
     amax = float(jnp.max(jnp.abs(x)))
     step = amax / (2 ** (bits - 1) - 1)
     assert float(jnp.max(jnp.abs(q - x))) <= step * 0.5 + 1e-6
+
+
+def test_fake_quant_percentile_clips_small_tensor_outlier():
+    """Regression (ISSUE 6 satellite 1): the nearest-rank percentile must
+    still clip on SMALL tensors. The old ``int(n·(1−p/100))`` floored to 0
+    for n < 1/(1−p/100) (e.g. n=100 at p=99), silently degrading to amax —
+    one outlier then owned the whole calibration range."""
+    x = np.zeros(100, np.float32)
+    x[:99] = np.linspace(-1.0, 1.0, 99)
+    x[99] = 50.0                                     # the outlier
+    q99 = np.asarray(fake_quant(jnp.asarray(x), 4, percentile=99.0))
+    # nearest-rank: p=99, n=100 → k = 100 − ceil(99) + 1 = 2 → scale from the
+    # 2nd-largest magnitude (1.0), NOT the outlier. Code points cover [-1, 1]:
+    # the quantized inliers stay tight and the outlier saturates at ≈ -qmin·step.
+    step = 1.0 / 7.0
+    inlier_err = np.abs(q99[:99] - x[:99]).max()
+    assert inlier_err <= step * 0.5 + 1e-6
+    assert q99[99] <= 8 * step + 1e-6               # clipped, nowhere near 50
+    # pure-amax scale for contrast: inliers collapse onto ~1 code point
+    q_amax = np.asarray(fake_quant(jnp.asarray(x), 4))
+    assert np.abs(q_amax[:99] - x[:99]).max() > 10 * inlier_err
+
+
+def test_fake_quant_percentile_degrades_to_amax_when_rank_saturates():
+    """n=50 at p=99: ceil(0.99·50)=50 → k=1 — the percentile IS the max
+    (documented nearest-rank behavior, not the old silent floor-to-zero)."""
+    x = np.linspace(-1.0, 1.0, 49).astype(np.float32)
+    x = np.concatenate([x, [20.0]]).astype(np.float32)
+    q = np.asarray(fake_quant(jnp.asarray(x), 4, percentile=99.0))
+    q_amax = np.asarray(fake_quant(jnp.asarray(x), 4))
+    np.testing.assert_array_equal(q, q_amax)
+
+
+def test_quantize_tree_threads_percentile():
+    """quantize_tree(percentile=) must reach every leaf's calibration (it was
+    silently dropped before — tree-level quantization always ran pure-amax)."""
+    x = np.zeros(100, np.float32)
+    x[:99] = np.linspace(-1.0, 1.0, 99)
+    x[99] = 50.0
+    tree = {"a": jnp.asarray(x), "n": 3}
+    out = quantize_tree(tree, 4, percentile=99.0)
+    ref = np.asarray(fake_quant(jnp.asarray(x), 4, percentile=99.0))
+    np.testing.assert_array_equal(np.asarray(out["a"]), ref)
+    assert out["n"] == 3
+    out_amax = quantize_tree(tree, 4)
+    assert not np.array_equal(np.asarray(out_amax["a"]), ref)
+
+
+# --------------------------------------------------------- halo wire payloads
+def test_payload_bits_table_and_unknown():
+    assert payload_bits(None) == payload_bits("fp32") == 32
+    assert payload_bits("bf16") == 16
+    assert payload_bits("int8") == 8
+    with pytest.raises(ValueError, match="unknown halo payload"):
+        payload_bits("fp8")
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_payload_roundtrip_error_bounds(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    w, s = quantize_payload(x, "fp32")
+    assert s is None and np.array_equal(np.asarray(w), np.asarray(x))
+    w, s = quantize_payload(x, "bf16")
+    assert s is None and w.dtype == jnp.bfloat16
+    back = np.asarray(dequantize_payload(w, s))
+    # bf16: 8 mantissa bits → ≤ 2^-8 relative per element
+    assert np.abs(back - np.asarray(x)).max() <= 2.0**-8 * np.abs(x).max() + 1e-7
+    w, s = quantize_payload(x, "int8")
+    assert w.dtype == jnp.int8 and s.shape == (1, 1)
+    back = np.asarray(dequantize_payload(w, s))
+    amax = float(np.abs(np.asarray(x)).max())
+    assert np.abs(back - np.asarray(x)).max() <= amax / 127.0 * 0.5 + 1e-6
+
+
+def test_int8_payload_multiblock_dequant_uses_per_sender_scale():
+    """dequantize_payload with (n_blocks, 1) scales rescales each gathered
+    export block by ITS sender's amax — mixing magnitudes across senders."""
+    small = np.full((4, 3), 0.5, np.float32)
+    big = np.full((4, 3), 100.0, np.float32)
+    w1, s1 = quantize_payload(jnp.asarray(small), "int8")
+    w2, s2 = quantize_payload(jnp.asarray(big), "int8")
+    wire = jnp.concatenate([w1, w2], axis=0)
+    scales = jnp.concatenate([s1, s2], axis=0)      # (2, 1)
+    back = np.asarray(dequantize_payload(wire, scales))
+    np.testing.assert_allclose(back[:4], small, atol=0.5 / 127 + 1e-6)
+    np.testing.assert_allclose(back[4:], big, atol=100.0 / 127 + 1e-4)
+
+
+def test_exchange_cost_model():
+    ec = exchange_cost(1000, 64, 32, 0.0)
+    assert ec.wire_bytes == 1000 * 64 * 4 and ec.exposed_bytes == ec.wire_bytes
+    assert ec.compression == 1.0
+    ec = exchange_cost(1000, 64, 16, 0.75)
+    assert ec.wire_bytes == 1000 * 64 * 2          # bf16 halves the wire
+    assert ec.exposed_bytes == pytest.approx(ec.wire_bytes * 0.25)
+    assert ec.compression == 2.0
+    assert exchange_cost(1000, 64, 8).compression == 4.0
+    # overlap=1 → nothing exposed
+    assert exchange_cost(10, 4, 32, 1.0).exposed_bytes == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d_in=st.integers(1, 512),
+    d_out=st.integers(1, 512),
+    halo_rows=st.integers(0, 5000),
+    bits=st.sampled_from([8, 16, 32]),
+    ov=st.floats(0.0, 1.0),
+)
+def test_choose_order_argmax_invariant_under_exchange_term(d_in, d_out, halo_rows, bits, ov):
+    """The exchange term moves with the same d_out-vs-d_in sign as compute,
+    so adding it never flips the chooser (documented on choose_order)."""
+    base = choose_order(2000, d_in, d_out, n_edges=10_000)
+    with_exchange = choose_order(
+        2000, d_in, d_out, n_edges=10_000,
+        halo_rows=halo_rows, payload_bits=bits, overlap_fraction=ov,
+    )
+    assert with_exchange == base

@@ -130,6 +130,88 @@ def test_eviction_under_tiny_capacity():
         np.testing.assert_allclose(qn.logits, qo.logits, rtol=1e-5, atol=1e-5)
 
 
+def test_cache_hits_counted_exactly_once_hand_counted():
+    """Regression (ISSUE 6 satellite 2): ``stats()["hits"]`` counts each
+    serving hit EXACTLY once — at lookup time during sampling. The old
+    harvest path re-added ``blk.cache_hits`` on top, doubling hits and
+    inflating hit_rate. Hand-counted: sample a block against an empty cache,
+    admit the frontier's layer-1 rows, resample — every lookup tally on the
+    cache must equal the block's own per-sample counts."""
+    g, cfg, _ = _setup()
+    s = ServeSampler(g, fanout=3, n_layers=2, seed=0)
+    c = HotNeighborCache(capacity=64, degree=s.in_deg)
+    seeds = np.asarray([5, 17])
+    blk = s.sample_block(seeds, batch_seeds=2, cache=c)
+    # cold cache: every lookup misses, counted once each, zero hits
+    assert blk.cache_hits == 0 and c.hits == 0
+    assert blk.cache_misses > 0 and c.misses == blk.cache_misses
+    # Warm every block node's layer-1 row (a superset of what was looked
+    # up — extra entries are inert, only actual lookups count), resample:
+    # the same layer-1 lookups now hit, once per lookup, nothing re-added
+    # on any other path.
+    for v in blk.node_ids[: blk.n_nodes]:
+        c.admit(int(v), 1, np.ones(cfg.layer_dims[1], np.float32))
+    h0, m0 = c.hits, c.misses
+    blk2 = s.sample_block(seeds, batch_seeds=2, cache=c)
+    assert blk2.cache_hits > 0
+    assert c.hits - h0 == blk2.cache_hits          # exactly once per hit
+    assert c.misses - m0 == blk2.cache_misses
+    assert c.stats()["hits"] == c.hits
+    assert c.stats()["hit_rate"] == pytest.approx(
+        c.hits / (c.hits + c.misses)
+    )
+
+
+def test_engine_hits_match_lookup_tally():
+    """End-to-end double-count guard: wrap ``cache.lookup`` to count calls
+    independently; after serving two waves the engine's ``stats()`` hit/miss
+    totals must equal the wrapper's tally (the old harvest re-add made
+    ``hits`` exactly double the true count)."""
+    g, cfg, params = _setup()
+    nodes = hot_query_stream(g, 40)
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=4,
+                       cache_capacity=64, seed=0)
+    calls = {"hit": 0, "miss": 0}
+    orig_lookup = eng.cache.lookup
+
+    def counting_lookup(node, layer):
+        val = orig_lookup(node, layer)
+        calls["hit" if val is not None else "miss"] += 1
+        return val
+
+    eng.cache.lookup = counting_lookup
+    for wave in (nodes, nodes):
+        for v in wave:
+            eng.submit(int(v))
+        eng.run_until_drained()
+    s = eng.stats()["cache"]
+    assert calls["hit"] > 0
+    assert s["hits"] == calls["hit"]
+    assert s["misses"] == calls["miss"]
+
+
+def test_bytes_saved_dtype_aware_formula():
+    """bytes_saved derives from the feature array's dtype itemsize and the
+    injected row's actual nbytes (not a hard-coded 4·F with no injection
+    credit): each layer-1 injection saves rows·F·itemsize gathered feature
+    bytes minus the H·itemsize activation row shipped in their place."""
+    g, cfg, params = _setup()                       # F=16, H=8, 2 layers
+    nodes = hot_query_stream(g, 32)
+    on = _serve_two_waves(g, cfg, params, nodes, capacity=64)
+    s = on.stats()["cache"]
+    assert s["rows_saved"] > 0
+    feat_bytes = on.features.dtype.itemsize * on.features.shape[1]
+    row_bytes = on.features.dtype.itemsize * cfg.layer_dims[1]
+    rows_per = on.sampler.subtree_counts(1)[0]      # per-injection row credit
+    assert s["rows_saved"] % rows_per == 0
+    n_inj = s["rows_saved"] // rows_per
+    assert s["bytes_saved"] == pytest.approx(
+        s["rows_saved"] * feat_bytes - n_inj * row_bytes
+    )
+    # the injected activation row is a real cost — never free bandwidth
+    assert s["bytes_saved"] < s["rows_saved"] * feat_bytes
+
+
 def test_degree_ranked_admission():
     deg = np.asarray([10, 1, 5, 7])
     c = HotNeighborCache(capacity=2, degree=deg)
