@@ -18,6 +18,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks.comm_bench import comm_rows
+    from benchmarks.delta_bench import delta_rows
     from benchmarks.fig07_quant import fig07_quant_accuracy
     from benchmarks.kernel_bench import bench_kernels_rows, kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         ("halo", halo_vs_broadcast),
         ("comm-tier", comm_tier_rows),
         ("comm", comm_rows),
+        ("delta", delta_rows),
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),

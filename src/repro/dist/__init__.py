@@ -19,8 +19,16 @@ This package makes that contract executable on a JAX mesh:
            :func:`hier_halo_aggregate` run a two-phase collective in which
            only deduplicated remote-needed rows (``s_rem`` per device) cross
            the expensive inter-pod tier (docs/communication.md).
+  delta  — :class:`GraphDelta` / :class:`DeltaPlanner`: incremental repair
+           of cached plans under edge inserts/deletes on a FIXED partition
+           (docs/communication.md §7) — dirty-device segment recompute,
+           keep-or-grow pads, tile-level blocked-adjacency patching, and
+           versioned plan-cache re-keying — plus
+           :func:`apply_delta_to_graph`, the order-preserving `GraphData`
+           application the serving layer's scoped invalidation builds on.
 """
 from repro.dist.compat import ensure_shard_map
+from repro.dist.delta import DeltaPlanner, GraphDelta, apply_delta_to_graph
 from repro.dist.halo import (
     HaloPlan,
     build_halo_plan,
@@ -40,5 +48,8 @@ __all__ = [
     "halo_aggregate",
     "hier_halo_exchange",
     "hier_halo_aggregate",
+    "GraphDelta",
+    "DeltaPlanner",
+    "apply_delta_to_graph",
     "ensure_shard_map",
 ]

@@ -55,8 +55,11 @@ cross-invalidation and differently-podded meshes never collide.
 ``cached_halo_plan`` is the lazy entry point (the builder only runs on a
 miss), ``get_halo_plan`` the eager one, and ``invalidate_halo_plans`` drops
 entries — called by ``train/elastic.py`` when an elastic resize changes the
-model-parallel degree (a re-partition event; the current replan is the full
-rebuild, an incremental boundary-delta replan is a future optimization).
+model-parallel degree (a re-partition event stales every plan derived from
+the partition). For graph mutations that KEEP the partition (edge
+inserts/deletes, feature-row touches) the full rebuild is no longer the
+only path: `repro.dist.delta` repairs cached plans incrementally and
+re-registers them under a versioned key via ``register_halo_plan``.
 """
 from __future__ import annotations
 
@@ -86,6 +89,7 @@ __all__ = [
     "graph_fingerprint",
     "cached_halo_plan",
     "get_halo_plan",
+    "register_halo_plan",
     "invalidate_halo_plans",
     "plan_cache_stats",
     "reset_plan_cache_stats",
@@ -614,23 +618,52 @@ def get_halo_plan(
     )
 
 
-def invalidate_halo_plans(graph_key: str | None = None) -> int:
+def register_halo_plan(
+    graph_key: str,
+    k: int,
+    mesh_axis: "str | tuple[str, ...]" = "model",
+    *,
+    pods: int = 1,
+    plan: HaloPlan,
+) -> HaloPlan:
+    """Install an already-built plan under the cache key the lazy lookups
+    use — the write-side counterpart of :func:`cached_halo_plan`.
+
+    `repro.dist.delta` repairs plan objects in place and re-registers them
+    here under the mutated graph's new versioned key, so the next
+    ``cached_halo_plan``/``get_halo_plan`` with that key is a HIT and never
+    re-runs the builder. Overwriting an existing entry is allowed (latest
+    registration wins) and is not counted as an eviction.
+    """
+    key_axes = mesh_axis if isinstance(mesh_axis, str) else (tuple(mesh_axis), int(pods))
+    _PLAN_CACHE[(graph_key, int(k), key_axes)] = plan
+    return plan
+
+
+def invalidate_halo_plans(graph_key: str | None = None, *, k: int | None = None) -> int:
     """Drop cached plans (all of them, or one graph's). Returns #evicted.
 
-    Matching is on the ``graph_key`` component only, so one graph's flat AND
-    hierarchical plans are evicted together — a re-partition stales both.
+    Matching is on the ``graph_key`` component (optionally narrowed by
+    ``k``), so ONE scoped call evicts a graph's flat plan AND every
+    hierarchical variant — all ``(axes, n_pods)`` key flavors sharing that
+    hash — together, while plans of other graphs coexist untouched.
     ``train/elastic.py`` calls this on an elastic resize that changes the
     model-parallel degree: the node→CE partition is stale, so every plan
     derived from it is too. The next ``get_halo_plan``/``cached_halo_plan``
-    rebuilds from scratch (full replan — correct; an incremental
-    boundary-delta replan can slot in behind the same API later).
+    rebuilds from scratch. Graph mutations that keep the partition should
+    prefer the incremental path: `repro.dist.delta.DeltaPlanner` repairs the
+    plan objects and moves them to the new key via :func:`register_halo_plan`
+    instead of rebuilding.
     """
     if graph_key is None:
         n = len(_PLAN_CACHE)
         _PLAN_CACHE.clear()
         _PLAN_STATS["evictions"] += n
         return n
-    victims = [key for key in _PLAN_CACHE if key[0] == graph_key]
+    victims = [
+        key for key in _PLAN_CACHE
+        if key[0] == graph_key and (k is None or key[1] == k)
+    ]
     for key in victims:
         del _PLAN_CACHE[key]
     _PLAN_STATS["evictions"] += len(victims)

@@ -34,10 +34,30 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bsr_spmm_pallas"]
+__all__ = ["bsr_spmm_pallas", "poison_padding"]
+
+
+def poison_padding(vals, cols, lens, poison=float("nan")):
+    """Copy of ``vals`` with every padding tile (t ≥ lens[r]) set to
+    ``poison`` (NaN by default). Host-side numpy; works for the global
+    (R, T, B, B) layout and the per-device (k, R, T, B, B) one.
+
+    The ragged-skip contract says the kernel NEVER reads those tiles —
+    running the SpMM on a poisoned copy and checking the output for NaN
+    proves it. The delta path (`repro.dist.delta`) leans on this: a
+    tombstoned tile is swapped into the padding region, and this check is
+    what pins "freed slot" as "never touched" rather than "zero by luck".
+    """
+    vals = np.array(vals, copy=True)
+    cols = np.asarray(cols)
+    t = cols.shape[-1]
+    pad = np.arange(t) >= np.asarray(lens)[..., None]     # (..., T)
+    vals[pad] = poison
+    return vals
 
 
 def _kernel(cols_ref, lens_ref, vals_ref, z_ref, out_ref):

@@ -284,8 +284,11 @@ class HotNeighborCache:
     Admission is by in-degree (COIN's hubs — I-GCN's "islands" — are exactly
     the rows every query re-fetches): when full, a newcomer evicts the
     lowest-degree resident only if it out-ranks it. ``invalidate`` drops
-    every entry — the engine calls it on any feature or weight update, since
-    stored activations are pure functions of (params, features).
+    every entry — the engine calls it on any weight update, since stored
+    activations are pure functions of (params, features). Graph/feature
+    deltas use :meth:`invalidate_nodes` instead: the engine computes which
+    residents' sampled dependency cones intersect the delta
+    (``GraphBatcher._scoped_invalidate``) and drops only those.
     """
 
     def __init__(self, capacity: int, degree: np.ndarray):
@@ -296,6 +299,8 @@ class HotNeighborCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.scoped_invalidations = 0
+        self.nodes_dropped = 0
         self.rows_saved = 0
         self.edges_saved = 0
         self.bytes_saved = 0.0
@@ -349,6 +354,22 @@ class HotNeighborCache:
         self._entries.clear()
         self.invalidations += 1
 
+    def invalidate_nodes(self, nodes) -> int:
+        """Scoped drop: remove only the named residents (all their layers).
+        Returns how many residents were actually dropped."""
+        dropped = 0
+        for v in nodes:
+            if self._entries.pop(int(v), None) is not None:
+                dropped += 1
+        self.scoped_invalidations += 1
+        self.nodes_dropped += dropped
+        return dropped
+
+    def resident_depths(self) -> dict[int, int]:
+        """{node: deepest cached layer} — what a scoped invalidation must
+        walk (an entry cached at layer ℓ depends on the ℓ-hop sampled cone)."""
+        return {v: max(layers) for v, layers in self._entries.items() if layers}
+
     def record_saving(self, rows: int, edges: int, bytes_: float) -> None:
         self.rows_saved += rows
         self.edges_saved += edges
@@ -363,6 +384,8 @@ class HotNeighborCache:
             "hit_rate": self.hit_rate,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "scoped_invalidations": self.scoped_invalidations,
+            "nodes_dropped": self.nodes_dropped,
             "rows_saved": self.rows_saved,
             "edges_saved": self.edges_saved,
             "bytes_saved": self.bytes_saved,
@@ -436,6 +459,9 @@ class GraphBatcher:
         )
         if model == "egnn" and self.positions is None:
             raise ValueError("egnn serving needs graph.positions")
+        self.graph = graph
+        self._add_self_loops = bool(add_self_loops)
+        self._seed = int(seed)
         g = graph.with_self_loops() if add_self_loops else graph
         self.sampler = ServeSampler(g, fanout, n_layers, seed=seed)
         self.max_nodes, self.max_edges = self.sampler.max_shapes(self.batch_seeds)
@@ -644,12 +670,78 @@ class GraphBatcher:
         if self.cache is not None:
             self.cache.invalidate("weights")
 
-    def update_features(self, features: np.ndarray) -> None:
-        """Swap node features; cached activations are stale → invalidate."""
+    def update_features(self, features: np.ndarray, touched=None) -> None:
+        """Swap node features. Without ``touched`` every cached activation
+        is presumed stale (full invalidation, the pre-delta behavior). With
+        ``touched`` — the rows that actually changed — only residents whose
+        sampled dependency cone reaches a touched row are dropped."""
         assert features.shape == self.features.shape
         self.features = np.asarray(features, np.float32)
-        if self.cache is not None:
+        self.graph = dataclasses.replace(self.graph, features=self.features)
+        if self.cache is None:
+            return
+        if touched is None:
             self.cache.invalidate("features")
+        else:
+            self._scoped_invalidate(
+                set(np.asarray(touched, np.int64).ravel().tolist()))
+
+    def apply_graph_delta(self, delta) -> dict[str, Any]:
+        """Mutate the served graph in place: apply the
+        `repro.dist.delta.GraphDelta` (order-preserving — deletes compact,
+        inserts append), rebuild the sampler over the new edges, and drop
+        ONLY the cache residents whose sampled dependency cone intersects
+        the delta.
+
+        Why the scoped drop is exact and not heuristic: the new sampler's
+        frontier walk from a resident v covers, by induction over layers,
+        every node v's cached activation could read under the NEW graph. If
+        that cone avoids every delta endpoint and feature touch, the old and
+        new sampled subtrees are identical node-for-node (order-preserving
+        application keeps untouched CSR rows — and so the counter-hashed
+        draws — bit-identical, and the sym-norm scalars of unchanged-degree
+        nodes are unchanged), so the cached value is still the exact
+        activation. Degree-changed nodes are delta endpoints themselves and
+        thus inside every dependent cone. Fixed-shape compiled forwards are
+        untouched — ``max_shapes`` depends only on (fanout, n_layers)."""
+        from repro.dist.delta import apply_delta_to_graph
+
+        self.graph = apply_delta_to_graph(self.graph, delta)
+        if self.graph.features is not None:
+            self.features = np.asarray(self.graph.features, np.float32)
+        g = (self.graph.with_self_loops() if self._add_self_loops
+             else self.graph)
+        self.sampler = ServeSampler(
+            g, self.sampler.fanout, self.sampler.n_layers, seed=self._seed)
+        dropped = resident = 0
+        if self.cache is not None:
+            resident = len(self.cache)
+            self.cache.degree = self.sampler.in_deg
+            dropped = self._scoped_invalidate(
+                set(delta.touched_nodes().tolist()))
+        return {"affected_seeds": int(delta.touched_nodes().size),
+                "residents_before": resident, "residents_dropped": dropped}
+
+    def _scoped_invalidate(self, affected: set[int]) -> int:
+        """Drop cache residents whose L-hop sampled cone (under the CURRENT
+        sampler, L = the entry's deepest cached layer) intersects
+        ``affected``. Exact frontier walk, not a radius heuristic."""
+        if self.cache is None or not affected:
+            return 0
+        hot = np.zeros(self.sampler.n_nodes, bool)
+        hot[np.fromiter(affected, np.int64, len(affected))] = True
+        stale: list[int] = []
+        for v, depth in self.cache.resident_depths().items():
+            if hot[v]:
+                stale.append(v)
+                continue
+            frontier = np.asarray([v], np.int64)
+            for _ in range(depth):
+                frontier = np.unique(self.sampler.neighbors(frontier))
+                if hot[frontier].any():
+                    stale.append(v)
+                    break
+        return self.cache.invalidate_nodes(stale)
 
     # ------------------------------------------------------------- accounting
     def stats(self) -> dict[str, Any]:

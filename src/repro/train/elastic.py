@@ -38,18 +38,26 @@ def elastic_replan(
     n_healthy: int,
     model_shards: int,
     axes: tuple[str, ...] = ("data", "model"),
+    *,
+    graph_key: str | None = None,
 ) -> MeshPlan:
     """Largest mesh ≤ n_healthy that preserves the model-parallel degree.
 
     Model-parallel shards hold partitioned state (the COIN CE partition —
     can't shrink without re-partitioning), so the data axis absorbs the
-    loss: data' = floor(n_healthy / model_shards). If fewer than one data
-    replica remains, fall back to halving model shards — a re-partition
-    event, which also invalidates every cached halo plan (DESIGN.md §8):
-    the k of the node→CE partition changed, so the boundary relocation is
-    stale. The next `repro.dist.halo.get_halo_plan` performs the full
-    replan (an incremental boundary-delta replan can slot in behind the
-    same cache API later).
+    loss: data' = floor(n_healthy / model_shards). A **pure resize** (the
+    model degree survives, only the data axis narrows) keeps the node→CE
+    partition intact, so NO cached halo plan is touched — plan-cache
+    ``evictions`` stays 0 and the delta path (`repro.dist.delta`) keeps
+    repairing the same plan objects across the resize.
+
+    Only when fewer than one data replica remains do we halve the model
+    shards — a re-partition event: the k of the node→CE partition changed,
+    so the boundary relocation is stale and the affected plans are evicted
+    (DESIGN.md §8). Pass ``graph_key`` (the training graph's fingerprint or
+    the planner's current versioned key) to scope that eviction to the one
+    graph being re-partitioned — every ``(axes, n_pods)`` flavor of it goes
+    in the one call — instead of flushing every graph's plans.
     """
     if n_healthy < 1:
         raise ValueError("no healthy devices")
@@ -59,7 +67,7 @@ def elastic_replan(
     if m != model_shards:
         from repro.dist.halo import invalidate_halo_plans
 
-        invalidate_halo_plans()
+        invalidate_halo_plans(graph_key)
     d = max(n_healthy // m, 1)
     return MeshPlan(shape=(d, m), axes=axes)
 

@@ -1,0 +1,367 @@
+"""Reusable delta-vs-rebuild differential oracle (tests/test_graph_delta.py).
+
+Everything here is pure numpy and deliberately INDEPENDENT of the delta
+module's internals: plans are compared by decoding their sender encodings
+back to global (src, dst, w) edge multisets, by their export SETS, and by
+emulating the halo exchange + aggregation against the global reference —
+so a bookkeeping bug in `repro.dist.delta` cannot cancel out in the
+comparison. Slot LAYOUT inside a send table is deliberately NOT pinned:
+the builder emits sorted prefixes while the delta path keeps slots stable
+across mutations (freed slots become reusable holes), so the oracle checks
+the set of referenced exports + that unreferenced entries are zero, not
+slot order. Blocked tables are compared densified (the delta path and the
+re-blocker legitimately order tiles differently within a ragged row).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dist.delta import GraphDelta
+from repro.dist.halo import build_halo_plan
+
+TOL = 1e-5
+
+
+# ------------------------------------------------------------- random deltas
+def random_delta(
+    rng: np.random.Generator,
+    n: int,
+    edge_index: np.ndarray,
+    *,
+    max_ops: int = 10,
+    p_delete: float = 0.45,
+    feat_dim: int | None = None,
+    w_lo: float = 0.1,
+) -> GraphDelta:
+    """One random mutation batch against the CURRENT edge list: deletes are
+    drawn from existing edges (≥1 edge always survives), inserts are uniform
+    node pairs with positive weights, and (optionally) a few feature rows
+    are touched with replacement values."""
+    e = int(edge_index.shape[1])
+    n_ops = int(rng.integers(1, max_ops + 1))
+    n_del = min(int(rng.binomial(n_ops, p_delete)), max(e - 1, 0))
+    n_ins = n_ops - n_del
+    del_idx = rng.choice(e, size=n_del, replace=False) if n_del else np.zeros(0, np.int64)
+    ins = rng.integers(0, n, size=(2, n_ins), dtype=np.int64)
+    touches = np.zeros(0, np.int64)
+    values = None
+    if feat_dim is not None and rng.random() < 0.5:
+        touches = np.unique(rng.integers(0, n, size=int(rng.integers(1, 4))))
+        values = rng.standard_normal((touches.size, feat_dim)).astype(np.float32)
+    return GraphDelta(
+        edge_inserts=ins,
+        edge_deletes=np.asarray(edge_index[:, del_idx], np.int64),
+        insert_w=(w_lo + rng.random(n_ins)).astype(np.float32),
+        feature_touches=touches,
+        feature_values=values,
+    )
+
+
+def apply_delta_to_edges(
+    edge_index: np.ndarray, w: np.ndarray, delta: GraphDelta
+) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy oracle edge-list application (multiset deletes, appended
+    inserts) — the ground truth every repaired plan is compared against."""
+    s = np.asarray(edge_index[0], np.int64)
+    r = np.asarray(edge_index[1], np.int64)
+    n = max(int(s.max(initial=0)), int(r.max(initial=0))) + 1
+    keep = np.ones(s.shape[0], bool)
+    want: dict[int, int] = {}
+    for kk in (delta.edge_deletes[0] * n + delta.edge_deletes[1]).tolist():
+        want[kk] = want.get(kk, 0) + 1
+    for i, kk in enumerate((s * n + r).tolist()):
+        if want.get(kk, 0) > 0:
+            keep[i] = False
+            want[kk] -= 1
+    assert not any(want.values()), "oracle asked to delete an absent edge"
+    iw = (np.ones(delta.edge_inserts.shape[1], np.float32)
+          if delta.insert_w is None else delta.insert_w)
+    ei = np.concatenate([edge_index[:, keep], delta.edge_inserts], axis=1)
+    return ei, np.concatenate([np.asarray(w, np.float32)[keep], iw])
+
+
+# ------------------------------------------------------------- plan decoding
+def node_table(plan) -> np.ndarray:
+    """(k, n_local) global node id per local row (padding rows are -1)."""
+    nt = np.full((plan.k, max(plan.n_local, 1)), -1, np.int64)
+    off = 0
+    for b in range(plan.k):
+        sz = int(plan.part_sizes[b])
+        nt[b, :sz] = plan.perm[off:off + sz]
+        off += sz
+    return nt
+
+
+def decode_plan_edges(plan) -> np.ndarray:
+    """Decode every real edge back to global coordinates by INVERTING the
+    sender encoding (flat `send_idx` slots, or the hierarchical two-tier
+    member-block layout). Returns (3, E) rows [src, dst, w], lexsorted —
+    a canonical multiset for equality checks."""
+    nt = node_table(plan)
+    out_s, out_d, out_w = [], [], []
+    for b in range(plan.k):
+        m = plan.edge_w[b] > 0
+        s = plan.senders_l[b][m].astype(np.int64)
+        dst = nt[b, plan.receivers_l[b][m].astype(np.int64)]
+        src = np.full(s.shape[0], -1, np.int64)
+        loc = s < plan.n_local
+        src[loc] = nt[b, s[loc]]
+        h = s[~loc] - plan.n_local
+        if h.size:
+            if plan.is_hierarchical:
+                km, B = plan.k_model, plan.block_rows
+                p = b // km
+                mp, t = np.divmod(h, B)
+                hsrc = np.full(h.shape[0], -1, np.int64)
+                il = t < plan.s_loc
+                if il.any():
+                    dev = p * km + mp[il]
+                    hsrc[il] = nt[dev, plan.send_loc[dev, t[il]]]
+                if (~il).any():
+                    q, tt = np.divmod(t[~il] - plan.s_loc, plan.s_rem)
+                    dev = q * km + mp[~il]
+                    hsrc[~il] = nt[dev, plan.send_rem[dev, tt]]
+                src[~loc] = hsrc
+            else:
+                dev, t = np.divmod(h, plan.s_max)
+                src[~loc] = nt[dev, plan.send_idx[dev, t]]
+        out_s.append(src)
+        out_d.append(dst)
+        out_w.append(plan.edge_w[b][m])
+    s = np.concatenate(out_s)
+    d = np.concatenate(out_d)
+    w = np.concatenate(out_w).astype(np.float64)
+    order = np.lexsort((w, d, s))
+    return np.stack([s[order].astype(np.float64), d[order].astype(np.float64),
+                     w[order]])
+
+
+def expected_exports(plan, edge_index: np.ndarray, kind: str) -> list[np.ndarray]:
+    """Per-device sorted exported LOCAL rows one tier should hold, computed
+    straight from the edge list: ``flat`` = all cut edges, ``loc`` =
+    intra-pod cut, ``rem`` = inter-pod cut (pods read off the plan)."""
+    nt = node_table(plan)
+    n = plan.n_nodes
+    dev_of = np.full(n, -1, np.int64)
+    loc_of = np.full(n, -1, np.int64)
+    for b in range(plan.k):
+        rows = nt[b][nt[b] >= 0]
+        dev_of[rows] = b
+        loc_of[rows] = np.arange(rows.size)
+    src = np.asarray(edge_index[0], np.int64)
+    dst = np.asarray(edge_index[1], np.int64)
+    a_s, a_d = dev_of[src], dev_of[dst]
+    cut = a_s != a_d
+    if kind == "flat":
+        m = cut
+    else:
+        km = plan.k // plan.n_pods
+        same_pod = (a_s // km) == (a_d // km)
+        m = cut & same_pod if kind == "loc" else cut & ~same_pod
+    return [np.unique(loc_of[src[m & (a_s == d)]]) for d in range(plan.k)]
+
+
+def referenced_slots(plan, kind: str) -> list[np.ndarray]:
+    """Per-device sorted-unique slot indices actually referenced by some
+    receiver's halo encoding in `senders_l`. With stable slot assignment
+    the send tables are keyed sets (holes allowed), not sorted prefixes —
+    so the oracle verifies exactly the referenced entries instead of
+    assuming a layout. ``kind`` is ``"flat"`` (only meaningful on flat
+    plans), ``"loc"`` or ``"rem"`` (hierarchical plans)."""
+    refs: list[list[np.ndarray]] = [[] for _ in range(plan.k)]
+    for b in range(plan.k):
+        m = plan.edge_w[b] > 0
+        s = plan.senders_l[b][m].astype(np.int64)
+        h = s[s >= plan.n_local] - plan.n_local
+        if not h.size:
+            continue
+        if plan.is_hierarchical:
+            km, B = plan.k_model, plan.block_rows
+            p = b // km
+            mp, t = np.divmod(h, B)
+            il = t < plan.s_loc
+            if kind == "loc":
+                dev, slot = p * km + mp[il], t[il]
+            else:
+                q, tt = np.divmod(t[~il] - plan.s_loc, plan.s_rem)
+                dev, slot = q * km + mp[~il], tt
+        else:
+            dev, slot = np.divmod(h, plan.s_max)
+        for d in range(plan.k):
+            refs[d].append(slot[dev == d])
+    return [np.unique(np.concatenate(r)) if r else np.zeros(0, np.int64)
+            for r in refs]
+
+
+# --------------------------------------------------- numpy exchange emulation
+def relocate(plan, x: np.ndarray) -> np.ndarray:
+    out = np.zeros((plan.k, max(plan.n_local, 1)) + x.shape[1:], x.dtype)
+    off = 0
+    for b in range(plan.k):
+        sz = int(plan.part_sizes[b])
+        out[b, :sz] = x[plan.perm[off:off + sz]]
+        off += sz
+    return out
+
+
+def emulate_halo_table(plan, zb: np.ndarray, b: int) -> np.ndarray:
+    """Device b's ``[local ‖ halo]`` neighbor table, emulated in numpy from
+    the plan's send tables (flat all-gather, or the hierarchical two-phase
+    member-block layout documented on HaloPlan)."""
+    if not plan.is_hierarchical:
+        halo = [zb[j][plan.send_idx[j]] for j in range(plan.k)]
+    else:
+        km = plan.k_model
+        p = b // km
+        halo = []
+        for mp in range(km):
+            halo.append(zb[p * km + mp][plan.send_loc[p * km + mp]])
+            for q in range(plan.n_pods):
+                halo.append(zb[q * km + mp][plan.send_rem[q * km + mp]])
+    return np.concatenate([zb[b]] + halo, axis=0)
+
+
+def plan_aggregate(plan, zb: np.ndarray) -> np.ndarray:
+    """w-weighted neighbor aggregation over the emulated halo tables —
+    the numpy ground truth of `halo_exchange` + `halo_aggregate`."""
+    out = np.zeros(zb.shape, np.float64)
+    for b in range(plan.k):
+        tbl = emulate_halo_table(plan, zb, b).astype(np.float64)
+        m = plan.edge_w[b] > 0
+        s = plan.senders_l[b][m].astype(np.int64)
+        r = plan.receivers_l[b][m].astype(np.int64)
+        np.add.at(out[b], r, tbl[s] * plan.edge_w[b][m].astype(np.float64)[:, None])
+    return out
+
+
+def global_aggregate(edge_index, w, x: np.ndarray) -> np.ndarray:
+    out = np.zeros(x.shape, np.float64)
+    np.add.at(out, np.asarray(edge_index[1], np.int64),
+              x[np.asarray(edge_index[0], np.int64)].astype(np.float64)
+              * np.asarray(w, np.float64)[:, None])
+    return out
+
+
+# -------------------------------------------------------------- plan asserts
+def assert_plan_matches_rebuild(plan, part, edge_index, w) -> None:
+    """The differential core: a delta-repaired plan must agree with a
+    from-scratch `build_halo_plan` of the SAME schedule on everything except
+    pad width (which may only be ≥, never <)."""
+    rebuilt = build_halo_plan(
+        part, edge_index, w, axes=plan.axes, pods=plan.n_pods)
+    assert np.array_equal(plan.perm, rebuilt.perm)
+    assert np.array_equal(plan.part_sizes, rebuilt.part_sizes)
+    assert plan.n_local == rebuilt.n_local
+
+    # pads: keep-or-grow, never shrink below what the boundary needs
+    assert plan.s_max >= rebuilt.s_max, "flat pad shrank"
+    if plan.is_hierarchical:
+        assert plan.s_loc >= rebuilt.s_loc, "loc pad shrank"
+        assert plan.s_rem >= rebuilt.s_rem, "rem pad shrank"
+
+    # export sets: every expected export referenced through exactly one
+    # slot, every unreferenced table entry zero (slot ORDER is free — the
+    # builder sorts, the delta path keeps slots stable across mutations)
+    if plan.is_hierarchical:
+        tiers = [("loc", plan.send_loc, rebuilt.send_loc),
+                 ("rem", plan.send_rem, rebuilt.send_rem)]
+    else:
+        tiers = [("flat", plan.send_idx, rebuilt.send_idx)]
+    for kind, mine_tbl, ref_tbl in tiers:
+        exp = expected_exports(plan, edge_index, kind)
+        for name, p, tbl in (("delta", plan, mine_tbl),
+                             ("rebuild", rebuilt, ref_tbl)):
+            refd = referenced_slots(p, kind)
+            for d in range(p.k):
+                assert refd[d].size == exp[d].size, (
+                    f"{name} {kind} device {d}: {refd[d].size} referenced "
+                    f"slots for {exp[d].size} exports (duplicate or missing)")
+                assert np.array_equal(np.unique(tbl[d][refd[d]]), exp[d]), (
+                    f"{name} {kind} exports of device {d} diverge")
+                unref = np.ones(tbl[d].size, bool)
+                unref[refd[d]] = False
+                assert not tbl[d][unref].any(), (
+                    f"{name} {kind} unreferenced entries of device {d} "
+                    "are nonzero")
+    if plan.is_hierarchical:
+        # hierarchical senders never reference the flat accounting table,
+        # so check its nonzero entries as a set (a genuine export of local
+        # row 0 is indistinguishable from a hole — strictly weaker, but the
+        # flat tier gets the strong check through every flat plan)
+        exp = expected_exports(plan, edge_index, "flat")
+        for name, tbl in (("delta", plan.send_idx),
+                          ("rebuild", rebuilt.send_idx)):
+            for d in range(plan.k):
+                nz = tbl[d][tbl[d] != 0]
+                expnz = exp[d][exp[d] != 0]
+                assert nz.size == expnz.size and np.array_equal(
+                    np.unique(nz), expnz), (
+                    f"{name} flat exports of device {d} diverge")
+
+    # the decoded edge multiset: delta == rebuild == the true edge list
+    true = np.stack([
+        np.asarray(edge_index[0], np.float64),
+        np.asarray(edge_index[1], np.float64),
+        np.asarray(w, np.float64),
+    ])
+    true = true[:, np.lexsort((true[2], true[1], true[0]))]
+    for name, p in (("delta", plan), ("rebuild", rebuilt)):
+        dec = decode_plan_edges(p)
+        assert dec.shape == true.shape, f"{name} plan edge count diverges"
+        assert np.allclose(dec, true, atol=TOL), f"{name} plan edges diverge"
+
+    assert np.array_equal(plan.boundary_row_mask(), rebuilt.boundary_row_mask())
+
+    # numeric: emulated exchange + aggregation vs the global reference
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((plan.n_nodes, 8)).astype(np.float32)
+    ref = global_aggregate(edge_index, w, x)
+    for name, p in (("delta", plan), ("rebuild", rebuilt)):
+        zb = relocate(p, x)
+        agg = plan_aggregate(p, zb)
+        got = np.zeros(x.shape, np.float64)
+        off = 0
+        for b in range(p.k):
+            sz = int(p.part_sizes[b])
+            got[p.perm[off:off + sz]] = agg[b, :sz]
+            off += sz
+        assert np.abs(got - ref).max() < TOL, f"{name} plan aggregation diverges"
+
+
+# ----------------------------------------------------------- blocked asserts
+def densify(vals, cols, lens, n_rows: int, n_cols: int) -> np.ndarray:
+    """One device's ragged BSR table as a dense (n_rows, n_cols) matrix —
+    the order-insensitive canonical form (the delta patcher appends/swaps
+    tiles, the re-blocker sorts them; densified they must be equal)."""
+    B = vals.shape[-1]
+    nbr, T = cols.shape
+    out = np.zeros((nbr * B, -(-n_cols // B) * B), np.float32)
+    for rb in range(nbr):
+        seen = set()
+        for t in range(int(lens[rb])):
+            cb = int(cols[rb, t])
+            assert cb not in seen, f"duplicate block-col {cb} in row {rb}"
+            seen.add(cb)
+            out[rb * B:(rb + 1) * B, cb * B:(cb + 1) * B] += vals[rb, t]
+        # contract: padding tiles are zero, padding cols repeat the last valid
+        if int(lens[rb]) < T:
+            assert not vals[rb, int(lens[rb]):].any(), f"nonzero padding tile row {rb}"
+            expect = cols[rb, int(lens[rb]) - 1] if int(lens[rb]) else 0
+            assert (cols[rb, int(lens[rb]):] == expect).all(), (
+                f"repeat-last cols contract broken in row {rb}")
+    return out[:n_rows, :n_cols]
+
+
+def assert_blocked_matches(mine, ref) -> None:
+    """Delta-patched `PlanBlockedAdjacency` vs a re-blocked one: identical
+    shape metadata, identical densified matrices per device (tile ORDER in a
+    ragged row may differ; T padding may only be ≥)."""
+    assert mine.block == ref.block and mine.k == ref.k
+    assert mine.n_rows == ref.n_rows and mine.n_cols == ref.n_cols
+    assert mine.max_nnzb >= ref.max_nnzb, "patched T shrank below the rebuild"
+    for b in range(mine.k):
+        dm = densify(mine.vals[b], mine.cols[b], mine.lens[b],
+                     mine.n_rows, mine.n_cols)
+        dr = densify(ref.vals[b], ref.cols[b], ref.lens[b],
+                     ref.n_rows, ref.n_cols)
+        assert np.abs(dm - dr).max() < TOL, f"device {b} blocked tiles diverge"

@@ -23,6 +23,36 @@ except ModuleNotFoundError:
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
+# Flaky-seed hygiene: property tests must reproduce locally from a CI log.
+# Real hypothesis gets a pinned derandomize profile; the vendored stub is
+# already derandomized (per-test crc32 seeds) and accepts the same calls.
+from hypothesis import settings as _h_settings  # noqa: E402
+
+try:
+    _h_settings.register_profile(
+        "repro-derandomize", _h_settings(derandomize=True, deadline=None))
+    _h_settings.load_profile("repro-derandomize")
+except Exception:  # pragma: no cover — exotic hypothesis versions
+    pass
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--delta-seed",
+        action="store",
+        type=int,
+        default=0,
+        help="Extra seed mixed into the graph-delta mutation suites "
+             "(tests/test_graph_delta.py). CI failures print the active "
+             "seed; rerun with `--delta-seed=<n>` to reproduce locally.",
+    )
+
+
+@pytest.fixture
+def delta_seed(request) -> int:
+    """The --delta-seed CLI value (0 by default, pinned in CI)."""
+    return int(request.config.getoption("--delta-seed"))
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -10,7 +10,10 @@ Pins the subsystem's three contracts (ISSUE 3 acceptance):
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
+from _delta_oracle import random_delta
 from repro.core.partition import partition_graph
 from repro.graph.generators import citation_like
 from repro.models.gcn import GCNConfig, gcn_init
@@ -295,3 +298,82 @@ def test_pna_and_egnn_serve_smoke():
     with pytest.raises(ValueError):
         GraphBatcher(pna_init(jax.random.PRNGKey(0), pcfg), g, pcfg,
                      model="pna", cache_capacity=8)
+
+
+# ------------------------------------------------------- mutating the graph
+def _fresh_oracle(eng):
+    """A cache-less engine rebuilt on ``eng``'s CURRENT graph — the no-cache
+    ground truth for whatever mutations ``eng`` has absorbed in place."""
+    return GraphBatcher(eng.params, eng.graph, eng.cfg,
+                        batch_seeds=eng.batch_seeds, fanout=eng.sampler.fanout,
+                        cache_capacity=0, seed=eng._seed)
+
+
+def _serve_wave(eng, nodes):
+    start = len(eng.finished)
+    for v in nodes:
+        eng.submit(int(v))
+    eng.run_until_drained()
+    done = eng.finished[start:]
+    base = min(q.qid for q in done)
+    return {q.qid - base: q.logits for q in done}
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_interleaved_mutations_match_no_cache_oracle(seed, delta_seed):
+    """Property: under ANY interleaving of {serve wave, GraphDelta,
+    scoped feature update} the cached engine's logits match a fresh
+    cache-less engine rebuilt on the current graph — i.e. the scoped
+    frontier-walk invalidation never leaves a stale activation behind."""
+    rng = np.random.default_rng((seed << 10) ^ delta_seed)
+    g, cfg, params = _setup(seed=seed % 5, n=40, e=160, f=8, hidden=6)
+    eng = GraphBatcher(params, g, cfg, batch_seeds=4, fanout=2,
+                       cache_capacity=16, seed=0)
+    f_dim = g.features.shape[1]
+    for _ in range(8):
+        op = rng.random()
+        if op < 0.30:
+            d = random_delta(rng, g.n_nodes, eng.graph.edge_index,
+                             max_ops=6, feat_dim=f_dim)
+            rep = eng.apply_graph_delta(d)
+            assert rep["residents_dropped"] <= rep["residents_before"]
+        elif op < 0.45:
+            touched = np.unique(rng.integers(0, g.n_nodes, 3))
+            feats = np.array(eng.features)
+            feats[touched] += rng.standard_normal(
+                (touched.size, f_dim)).astype(np.float32)
+            eng.update_features(feats, touched=touched)
+        # hot skew (nodes 0..15) so replays actually hit the cache
+        wave = rng.integers(0, 16, 4)
+        got = _serve_wave(eng, wave)
+        want = _serve_wave(_fresh_oracle(eng), wave)
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5)
+    assert eng.cache.hits > 0, "interleaving never exercised the cache"
+
+
+def test_scoped_invalidation_drops_strictly_fewer_than_all():
+    """A localized delta (one low-degree edge deleted) must NOT nuke the
+    cache: only residents whose sampled cone reaches the endpoints drop,
+    the survivors keep serving, and post-delta logits stay exact."""
+    g, cfg, params = _setup()
+    nodes = hot_query_stream(g, 40)
+    eng = _serve_two_waves(g, cfg, params, nodes, capacity=64)
+    resident = len(eng.cache)
+    assert resident > 8, "need a warm cache for the scoped-drop contract"
+    deg = eng.sampler.in_deg
+    ei = eng.graph.edge_index
+    quiet = int(np.argmin(deg[ei[0]] + deg[ei[1]]))
+    from repro.dist.delta import GraphDelta
+    rep = eng.apply_graph_delta(GraphDelta(edge_deletes=ei[:, [quiet]]))
+    assert rep["residents_before"] == resident
+    assert rep["residents_dropped"] < resident, (
+        "scoped invalidation degenerated into a full flush")
+    assert len(eng.cache) == resident - rep["residents_dropped"]
+    assert eng.cache.scoped_invalidations == 1
+    assert eng.cache.invalidations == 0, "must not take the full-flush path"
+    got = _serve_wave(eng, nodes)
+    want = _serve_wave(_fresh_oracle(eng), nodes)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5)
