@@ -1,0 +1,101 @@
+"""Observability overhead micro-benchmark (`repro.obs`).
+
+Times the two states that matter for the telemetry contract
+(docs/observability.md):
+
+* **disabled** — the default. `metrics.inc` / `metrics.observe` /
+  `trace.span` must be a single module-bool check; the pinned
+  zero-allocation test (`tests/test_obs.py`) asserts the same path
+  allocates nothing, this bench reports what it costs in time.
+* **enabled** — the instrumented halo/serve hot paths pay this per event:
+  a lock, a dict lookup, and (histograms) a `bisect`.
+
+Rows print through `benchmarks.run` (suite label ``obs``) in the standard
+``name,us_per_call,derived`` CSV. Global obs state is saved and restored —
+the bench never leaves metrics enabled for later suites.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.obs import metrics, trace
+
+N_DISABLED = 100_000
+N_ENABLED = 20_000
+
+
+def _per_call_us(fn, n: int) -> float:
+    fn()  # warm (first call creates the series)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def obs_rows():
+    rows = []
+    was_enabled = metrics.enabled()
+    old_reg = metrics.set_default_registry(metrics.MetricsRegistry())
+    old_tr = trace.set_default_tracer(None)
+    metrics.disable()
+    try:
+        rows.append(("obs/inc_disabled",
+                     _per_call_us(lambda: metrics.inc("bench.c"), N_DISABLED),
+                     "no-op fast path"))
+        rows.append(("obs/observe_disabled",
+                     _per_call_us(lambda: metrics.observe("bench.h", 0.5), N_DISABLED),
+                     "no-op fast path"))
+
+        def _null_span():
+            with trace.span("bench.s"):
+                pass
+
+        rows.append(("obs/span_disabled",
+                     _per_call_us(_null_span, N_DISABLED),
+                     "reused null context manager"))
+
+        metrics.enable()
+        rows.append(("obs/inc_enabled",
+                     _per_call_us(lambda: metrics.inc("bench.c"), N_ENABLED),
+                     "locked counter add"))
+        rows.append(("obs/set_gauge_enabled",
+                     _per_call_us(lambda: metrics.set_gauge("bench.g", 1.0), N_ENABLED),
+                     "locked gauge set"))
+        rows.append(("obs/observe_enabled",
+                     _per_call_us(lambda: metrics.observe("bench.h", 0.5), N_ENABLED),
+                     "locked bisect into fixed buckets"))
+
+        trace.set_default_tracer(trace.TraceRecorder())
+
+        def _live_span():
+            with trace.span("bench.s"):
+                pass
+
+        rows.append(("obs/span_enabled",
+                     _per_call_us(_live_span, N_ENABLED),
+                     "perf_counter_ns edges + event append"))
+
+        reg = metrics.default_registry()
+        t0 = time.perf_counter()
+        snap = reg.snapshot()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(("obs/snapshot", us, f"series={len(snap)}"))
+
+        tr = trace.default_tracer()
+        t0 = time.perf_counter()
+        chrome = tr.to_chrome()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(("obs/to_chrome", us, f"events={len(chrome['traceEvents'])}"))
+    finally:
+        metrics.disable()
+        metrics.set_default_registry(old_reg)
+        trace.set_default_tracer(old_tr)
+        if was_enabled:
+            metrics.enable(old_reg)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in obs_rows():
+        print(f"{name},{us:.3f},{derived}")

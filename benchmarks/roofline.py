@@ -15,8 +15,15 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json"
 
 
 def load(path: str = RESULTS) -> list[dict]:
+    """Accepts both dry-run results schemas: the v1 bare record list and
+    the v2 ``{"schema": 2, "records": [...]}`` wrapper
+    (`repro.launch.dryrun.load_results` is the canonical loader; this stays
+    import-light so the bench never pins the 512-device XLA flag)."""
     with open(path) as f:
-        return json.load(f)
+        data = json.load(f)
+    if isinstance(data, dict):
+        return list(data.get("records", []))
+    return list(data)
 
 
 def fmt_s(x: float) -> str:

@@ -19,6 +19,7 @@ def main(argv=None) -> None:
 
     from benchmarks.comm_bench import comm_rows
     from benchmarks.delta_bench import delta_rows
+    from benchmarks.obs_bench import obs_rows
     from benchmarks.fig07_quant import fig07_quant_accuracy
     from benchmarks.kernel_bench import bench_kernels_rows, kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
@@ -59,6 +60,7 @@ def main(argv=None) -> None:
         ("kernels-ragged", bench_kernels_rows),
         ("spmm", lambda: spmm_compare_rows(full=args.full)),
         ("serve", serve_rows),
+        ("obs", obs_rows),
         ("fig07", lambda: fig07_quant_accuracy(
             datasets=("cora", "citeseer", "pubmed") if args.full else ("cora",),
             epochs=120,

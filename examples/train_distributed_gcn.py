@@ -20,6 +20,12 @@ schedule (docs/communication.md): the mesh becomes 2-D, the plan splits
 each device's boundary set into intra-/inter-pod tiers, and the exchange
 runs in two phases — the printout shows how few rows cross the expensive
 inter-pod fabric vs the flat plan.
+
+``--trace out.json`` / ``--metrics out.json`` (docs/observability.md) turn
+on the `repro.obs` telemetry: the metrics snapshot mirrors the plan's wire
+accounting and cache stats, and the trace ends with an `overlap_timeline`
+demo where the ``halo.exchange.boundary_collective`` span on the ``wire``
+track visibly encloses ``overlap.interior_compute`` in Perfetto.
 """
 import argparse
 import sys
@@ -42,7 +48,9 @@ from repro.dist.halo import (
 )
 from repro.dist.policy import ShardingPolicy
 from repro.graph.generators import make_dataset
+from repro.launch.obsflags import add_obs_args, obs_session
 from repro.models.gcn import GCNConfig, gcn_forward, gcn_init
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 from repro.train.loop import Trainer, TrainerConfig
 from repro.train.optimizer import adamw
 
@@ -54,8 +62,13 @@ def main() -> None:
     ap.add_argument("--pods", type=int, default=1,
                     help="pods for the hierarchical (pod, model) halo schedule "
                          "(must divide the device count; 1 = flat single-axis)")
+    add_obs_args(ap)
     args = ap.parse_args()
+    with obs_session(args):
+        run(args)
 
+
+def run(args) -> None:
     k = jax.device_count()
     pods = args.pods
     if pods < 1 or k % pods:
@@ -179,6 +192,19 @@ def main() -> None:
           f"({stats['size']} cached) — one relocation serves all layers/steps")
     assert losses[-1] < losses[0], "training must make progress"
     assert stats["hits"] >= 1 and stats["misses"] >= 1
+
+    # ---- telemetry: mirror the accounting, then trace the overlap ------------
+    if obs_metrics.enabled():
+        from repro.obs.instrument import observe_plan_cache, record_exchange
+
+        record_exchange(plan, int(batch["feats"].shape[-1]))
+        observe_plan_cache()
+    tracer = obs_trace.default_tracer()
+    if tracer is not None:
+        from repro.obs.instrument import overlap_timeline
+
+        print("tracing overlap: boundary collective (wire track) vs interior compute")
+        overlap_timeline(plan, batch["feats"], mesh, tracer=tracer)
 
 
 if __name__ == "__main__":

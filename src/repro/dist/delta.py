@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 
 import numpy as np
 
@@ -58,6 +59,8 @@ from repro.dist.halo import (
     register_halo_plan,
 )
 from repro.graph.structure import BlockedAdjacency, GraphData
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "GraphDelta",
@@ -663,11 +666,20 @@ class DeltaPlanner:
         self.e_local = new_cap
 
     # ----------------------------------------------------------------- apply
-    def apply(self, delta: GraphDelta) -> dict:
+    def apply(self, delta: GraphDelta, *, measure_drift: bool = False,
+              drift_block: int = 128) -> dict:
         """Apply one delta; repair every materialized plan in place; migrate
         the plan-cache entries to the new versioned key. Returns a repair
         report (counts of dirty devices, remapped senders, patched/dropped
-        blocked tables, grown pads)."""
+        blocked tables, grown pads, repair latency ``apply_ms``, and the
+        ``structural`` flag — True when some tier's pads grew, i.e. the
+        halo column space changed and memoized blocked tables were dropped
+        rather than patched). ``measure_drift=True`` additionally runs
+        :meth:`locality_drift` on the post-apply graph and attaches the
+        executed-tile drift record under ``"drift"`` (None otherwise).
+        When `repro.obs.metrics` is enabled the report is mirrored into the
+        ``delta.*`` series."""
+        t_apply = time.perf_counter()
         delta.validate(self.n)
         old_key = self.graph_key
         plans = list(self._plans.values())
@@ -892,7 +904,7 @@ class DeltaPlanner:
                 axes, pods = key_axes
                 register_halo_plan(self.graph_key, self.k, axes,
                                    pods=pods, plan=p)
-        return {
+        report = {
             "graph_key": self.graph_key,
             "version": self.version,
             "inserts": n_ins,
@@ -905,7 +917,63 @@ class DeltaPlanner:
             "blocked_dropped": dropped,
             "blocked_grown": self._tables_grown,
             "stale_keys_evicted": evicted,
+            "structural": bool(pads_grown),
+            "apply_ms": (time.perf_counter() - t_apply) * 1e3,
+            "drift": self.locality_drift(drift_block) if measure_drift else None,
         }
+        if _obs_metrics.enabled():
+            from repro.obs.instrument import record_delta_report
+
+            record_delta_report(report)
+        _obs_trace.instant("delta.apply", {
+            "inserts": report["inserts"], "deletes": report["deletes"],
+            "apply_ms": report["apply_ms"],
+        })
+        return report
+
+    def locality_drift(self, block: int = 128) -> dict:
+        """Executed-tile locality drift of the mutated graph (the ROADMAP
+        drift-metrics item): how much blocked-layout quality the CURRENT
+        node order has lost to mutations, measured in the executed-tile
+        currency the ragged bsr kernel actually pays.
+
+        Both sides are O(E) `repro.graph.structure.blocked_stats` counts
+        over the SAME current edge list, differing only in node order:
+
+          * ``executed_tiles_current``   — edges relabeled by the planner's
+            live blocked layout (``perm``, the order every patched blocked
+            table tiles over),
+          * ``executed_tiles_reordered`` — edges relabeled by a FRESH
+            `repro.graph.structure.locality_block_order` (method="bfs") of
+            the mutated graph.
+
+        ``drift_ratio = current / reordered`` — 1.0 means the standing
+        order is still as tile-dense as a re-islandization; growth beyond a
+        caller-chosen threshold is the re-block trigger. Mirrored into the
+        ``delta.drift_ratio`` gauge when metrics are enabled."""
+        from repro.graph.structure import (
+            blocked_stats,
+            locality_block_order,
+            permute_edge_index,
+        )
+
+        ei = self.edge_index()
+        cur_edges = permute_edge_index(self.perm, ei)
+        current = blocked_stats(self.n, cur_edges, block)["nnz_blocks"]
+        fresh = locality_block_order(self.n, ei, block, method="bfs")
+        new_edges = permute_edge_index(fresh, ei)
+        reordered = blocked_stats(self.n, new_edges, block)["nnz_blocks"]
+        drift = {
+            "block": block,
+            "executed_tiles_current": int(current),
+            "executed_tiles_reordered": int(reordered),
+            "drift_ratio": current / max(reordered, 1),
+        }
+        if _obs_metrics.enabled():
+            _obs_metrics.set_gauge("delta.drift_ratio", drift["drift_ratio"])
+            _obs_metrics.set_gauge("delta.executed_tiles_current", current)
+            _obs_metrics.set_gauge("delta.executed_tiles_reordered", reordered)
+        return drift
 
     def _remap_class(self, plan: HaloPlan, bm, sm, d_cut, n_cut, nc_cut,
                      class_sel, structural: bool, formula, ppairs) -> int:

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Callable
 
 import jax
@@ -75,6 +76,8 @@ from repro.core.quant import dequantize_payload, quantize_payload
 from repro.dist.compat import ensure_shard_map
 from repro.graph.ops import aggregate
 from repro.graph.structure import blocked_adjacency
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 ensure_shard_map()
 
@@ -520,6 +523,18 @@ _PLAN_CACHE: dict[tuple[str, int, object], HaloPlan] = {}
 _PLAN_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
+def _observe_cache_stats() -> None:
+    """Mirror the cache counters into ``plan_cache.*`` gauges — kept in
+    lockstep with every hit/miss/eviction so an exported snapshot always
+    equals :func:`plan_cache_stats` (the pinned obs equality test)."""
+    if not _obs_metrics.enabled():
+        return
+    _obs_metrics.set_gauge("plan_cache.hits", _PLAN_STATS["hits"])
+    _obs_metrics.set_gauge("plan_cache.misses", _PLAN_STATS["misses"])
+    _obs_metrics.set_gauge("plan_cache.evictions", _PLAN_STATS["evictions"])
+    _obs_metrics.set_gauge("plan_cache.size", len(_PLAN_CACHE))
+
+
 def graph_fingerprint(
     n_nodes: int,
     edge_index: np.ndarray,
@@ -570,10 +585,18 @@ def cached_halo_plan(
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_STATS["hits"] += 1
+        _observe_cache_stats()
         return plan
     _PLAN_STATS["misses"] += 1
-    plan = builder()
+    with _obs_trace.span("halo.plan_build", args={"k": int(k)}):
+        t0 = time.perf_counter()
+        plan = builder()
+        if _obs_metrics.enabled():
+            _obs_metrics.observe(
+                "halo.plan_build_ms", (time.perf_counter() - t0) * 1e3
+            )
     _PLAN_CACHE[key] = plan
+    _observe_cache_stats()
     return plan
 
 
@@ -659,6 +682,7 @@ def invalidate_halo_plans(graph_key: str | None = None, *, k: int | None = None)
         n = len(_PLAN_CACHE)
         _PLAN_CACHE.clear()
         _PLAN_STATS["evictions"] += n
+        _observe_cache_stats()
         return n
     victims = [
         key for key in _PLAN_CACHE
@@ -667,6 +691,7 @@ def invalidate_halo_plans(graph_key: str | None = None, *, k: int | None = None)
     for key in victims:
         del _PLAN_CACHE[key]
     _PLAN_STATS["evictions"] += len(victims)
+    _observe_cache_stats()
     return len(victims)
 
 
@@ -871,6 +896,7 @@ def plan_blocked_adjacency(plan: HaloPlan, block: int = 128) -> PlanBlockedAdjac
     hit = cache.get(block)
     if hit is not None:
         return hit
+    _obs_trace.instant("halo.blocked_build", {"block": block})
     n_cols = plan.neighbor_table_rows
     nbr = max(-(-plan.n_local // block), 1)
     per_dev = []
@@ -896,6 +922,10 @@ def plan_blocked_adjacency(plan: HaloPlan, block: int = 128) -> PlanBlockedAdjac
         n_rows=plan.n_local, n_cols=n_cols,
     )
     cache[block] = out
+    if _obs_metrics.enabled():
+        from repro.obs.instrument import record_blocked
+
+        record_blocked(out, scope="plan")
     return out
 
 

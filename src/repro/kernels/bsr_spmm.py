@@ -38,6 +38,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
 __all__ = ["bsr_spmm_pallas", "poison_padding"]
 
 
@@ -95,6 +98,17 @@ def bsr_spmm_pallas(
     assert z.shape[0] % B == 0
     assert lens.shape == (R,), (lens.shape, R)
     grid = (R, F // f_tile, T)
+    # Trace-time only (this body runs under jit): record the STATIC grid —
+    # the dense-T tile bound the ragged lens skip is judged against. The
+    # runtime executed-tile count is host data (``lens.sum()``), recorded by
+    # `repro.obs.instrument.record_blocked` at table-build time, never here.
+    if _obs_metrics.enabled():
+        _obs_metrics.inc("bsr.traces")
+        _obs_metrics.set_gauge("bsr.grid_dense_tiles", R * T,
+                               (("scope", "kernel"),))
+        _obs_metrics.set_gauge("bsr.grid_block", B, (("scope", "kernel"),))
+    _obs_trace.instant("kernels.bsr_spmm.trace",
+                       {"R": R, "T": T, "B": B, "F": F, "f_tile": f_tile})
     return pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -29,11 +29,23 @@ import sys
 import time
 import traceback
 
+from repro.launch.obsflags import add_obs_args, obs_session
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
 __doc__ = _DOC
 
-__all__ = ["run_cell", "collective_bytes", "exchange_accounting", "main"]
+__all__ = [
+    "run_cell", "collective_bytes", "exchange_accounting", "load_results", "main",
+]
 
 RESULTS_PATH = "results/dryrun.json"
+# Results-file schema: v1 was a bare list of records; v2 wraps it as
+# {"schema": 2, "records": [...]} so consumers (tests, benchmarks/roofline.py)
+# can tell a partially-regenerated file from a complete sweep and treat a
+# stale v1/v2 file with missing meshes as "not yet executed" instead of
+# failing on it.
+RESULTS_SCHEMA = 2
 
 # TPU v5e constants (per the assignment's §Roofline).
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -181,6 +193,15 @@ def exchange_accounting(cell, shape) -> dict | None:
     }
     if getattr(cell, "bsr_stats", None):
         out["bsr"] = dict(cell.bsr_stats)
+    if _obs_metrics.enabled():
+        # Mirror the prediction into the same series the runtime layers
+        # measure into — the prediction-vs-observation diff is then a plain
+        # snapshot diff (docs/observability.md).
+        from repro.obs.instrument import record_blocked, record_exchange
+
+        record_exchange(plan, d, payload)
+        if getattr(cell, "bsr_stats", None):
+            record_blocked(cell.bsr_stats, scope="dryrun")
     if plan.is_hierarchical:
         out.update(
             axes=list(plan.axes),
@@ -224,11 +245,19 @@ def run_cell(
     try:
         t0 = time.time()
         cell = build_cell(spec, shape, mesh, optimized=optimized, comm=comm, payload=payload)
-        lowered = cell.lower(mesh)
+        with _obs_trace.span("dryrun.lower",
+                             args={"arch": arch_id, "shape": shape_name}):
+            lowered = cell.lower(mesh)
         t_lower = time.time() - t0
         t0 = time.time()
-        compiled = lowered.compile()
+        with _obs_trace.span("dryrun.compile",
+                             args={"arch": arch_id, "shape": shape_name}):
+            compiled = lowered.compile()
         t_compile = time.time() - t0
+        if _obs_metrics.enabled():
+            _obs_metrics.observe("dryrun.lower_s", t_lower)
+            _obs_metrics.observe("dryrun.compile_s", t_compile)
+            _obs_metrics.inc("dryrun.cells")
         cost = compiled.cost_analysis() or {}
         try:
             mem = compiled.memory_analysis()
@@ -292,18 +321,30 @@ def run_cell(
     return rec
 
 
-def _load(path: str) -> list[dict]:
+def load_results(path: str = RESULTS_PATH) -> list[dict]:
+    """Load a results file in either schema: the v1 bare list or the v2
+    ``{"schema": 2, "records": [...]}`` wrapper. Missing file → []. The
+    single loader every consumer (the resumable sweep itself, the tier-1
+    completeness test, benchmarks/roofline.py) shares, so a schema bump
+    happens in exactly one place."""
     try:
         with open(path) as f:
-            return json.load(f)
+            data = json.load(f)
     except FileNotFoundError:
         return []
+    if isinstance(data, dict):
+        return list(data.get("records", []))
+    return list(data)
+
+
+_load = load_results
 
 
 def _save(path: str, records: list[dict]) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        json.dump(records, f, indent=1, default=str)
+        json.dump({"schema": RESULTS_SCHEMA, "records": records},
+                  f, indent=1, default=str)
 
 
 def main(argv=None) -> int:
@@ -328,6 +369,7 @@ def main(argv=None) -> int:
                          "records, no tag suffix); 'bf16'/'int8' quantize the "
                          "boundary rows on the wire and record under a "
                          "'+bf16'/'+int8' mesh tag. Halo GNN cells only.")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     # "halo" is the default schedule: map both spellings to comm=None so the
     # identical computation never gets cached twice under different tags.
@@ -342,30 +384,31 @@ def main(argv=None) -> int:
     records = _load(args.out)
     done = {(r["arch"], r["shape"], r["mesh"]) for r in records if r.get("status") in ("OK", "SKIP")}
     failures = 0
-    for arch_id in archs:
-        spec = get_arch(arch_id)
-        shapes = [args.shape] if args.shape else list(spec.shapes)
-        for shape_name in shapes:
-            for multi in meshes:
-                mesh_tag = (
-                    ("2x16x16" if multi else "16x16")
-                    + ("+opt" if args.optimized else "")
-                    + (f"+{comm}" if comm else "")
-                    + (f"+{payload}" if payload else "")
-                )
-                key = (arch_id, shape_name, mesh_tag)
-                if key in done and not args.force:
-                    print(f"[cached] {key}")
-                    continue
-                rec = run_cell(
-                    arch_id, shape_name, multi,
-                    optimized=args.optimized, comm=comm, payload=payload,
-                )
-                records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
-                records.append(rec)
-                _save(args.out, records)
-                if rec["status"] == "FAIL":
-                    failures += 1
+    with obs_session(args):
+        for arch_id in archs:
+            spec = get_arch(arch_id)
+            shapes = [args.shape] if args.shape else list(spec.shapes)
+            for shape_name in shapes:
+                for multi in meshes:
+                    mesh_tag = (
+                        ("2x16x16" if multi else "16x16")
+                        + ("+opt" if args.optimized else "")
+                        + (f"+{comm}" if comm else "")
+                        + (f"+{payload}" if payload else "")
+                    )
+                    key = (arch_id, shape_name, mesh_tag)
+                    if key in done and not args.force:
+                        print(f"[cached] {key}")
+                        continue
+                    rec = run_cell(
+                        arch_id, shape_name, multi,
+                        optimized=args.optimized, comm=comm, payload=payload,
+                    )
+                    records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
+                    records.append(rec)
+                    _save(args.out, records)
+                    if rec["status"] == "FAIL":
+                        failures += 1
     print(f"dry-run sweep complete; {failures} failures")
     return 1 if failures else 0
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_arch
+from repro.launch.obsflags import add_obs_args, obs_session
 
 
 def serve_lm(spec, gen_tokens: int, batch: int = 4) -> None:
@@ -131,7 +132,7 @@ def serve_graph(
         engine.submit(int(v))
     engine.run_until_drained()
     dt = time.perf_counter() - t0
-    s = engine.stats()
+    s = engine.export_metrics()       # == stats(), mirrored into the registry
     print(
         f"{spec.arch_id}: {s['queries']} queries in {s['micro_batches']} micro-batches "
         f"({s['traces']} trace) in {dt*1e3:.1f} ms ({s['queries']/dt:.0f} q/s)"
@@ -163,21 +164,24 @@ def main(argv=None) -> None:
     ap.add_argument("--cache-capacity", type=int, default=256)
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--parts", type=int, default=4, help="partition-aligned packing parts")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     spec = get_arch(args.arch)
-    if spec.family == "lm":
-        serve_lm(spec, args.tokens)
-    elif spec.family == "recsys":
-        serve_recsys(spec, args.requests)
-    elif spec.family == "gnn":
-        serve_graph(
-            spec, args.queries,
-            batch_seeds=args.batch_seeds, fanout=args.fanout,
-            cache_capacity=0 if args.no_cache else args.cache_capacity,
-            n_parts=args.parts,
-        )
-    else:
-        raise SystemExit(f"{args.arch} is a training architecture; use repro.launch.train")
+    with obs_session(args):
+        if spec.family == "lm":
+            serve_lm(spec, args.tokens)
+        elif spec.family == "recsys":
+            serve_recsys(spec, args.requests)
+        elif spec.family == "gnn":
+            serve_graph(
+                spec, args.queries,
+                batch_seeds=args.batch_seeds, fanout=args.fanout,
+                cache_capacity=0 if args.no_cache else args.cache_capacity,
+                n_parts=args.parts,
+            )
+        else:
+            raise SystemExit(
+                f"{args.arch} is a training architecture; use repro.launch.train")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_arch
+from repro.launch.obsflags import add_obs_args, obs_session
 from repro.train.loop import Trainer, TrainerConfig
 from repro.train.optimizer import adamw
 
@@ -123,23 +124,25 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--compress-grads", action="store_true")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
     setup = {"lm": _lm_setup, "gnn": _gnn_setup, "recsys": _recsys_setup}[spec.family]
-    params, loss_fn, batches = setup(spec)
-    tr = Trainer(
-        loss_fn,
-        adamw(args.lr),
-        params,
-        TrainerConfig(
-            ckpt_dir=args.ckpt_dir, log_every=10, compress_grads=args.compress_grads
-        ),
-    )
-    if args.ckpt_dir:
-        tr.resume()
-    losses = tr.fit(batches(), max_steps=args.steps)
-    print(f"{args.arch}: loss {losses[0]:.4f} → {losses[-1]:.4f} over {len(losses)} steps")
+    with obs_session(args):
+        params, loss_fn, batches = setup(spec)
+        tr = Trainer(
+            loss_fn,
+            adamw(args.lr),
+            params,
+            TrainerConfig(
+                ckpt_dir=args.ckpt_dir, log_every=10, compress_grads=args.compress_grads
+            ),
+        )
+        if args.ckpt_dir:
+            tr.resume()
+        losses = tr.fit(batches(), max_steps=args.steps)
+        print(f"{args.arch}: loss {losses[0]:.4f} → {losses[-1]:.4f} over {len(losses)} steps")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,234 @@
+"""Bridges from existing accounting paths into the obs registry/tracer.
+
+Nothing here invents a number: every gauge is fed from a value an existing
+layer already computes — `repro.dist.halo.HaloPlan` wire properties,
+`repro.core.dataflow.exchange_cost`, `plan_cache_stats`,
+`repro.graph.structure.blocked_stats` / `PlanBlockedAdjacency.stats`, the
+`repro.dist.delta.DeltaPlanner.apply` report. That makes the pinned
+metrics-vs-accounting equality tests (`tests/test_obs_integration.py`)
+meaningful: the snapshot must reproduce the accounting bit-for-bit.
+
+Every recorder early-returns when metrics are disabled BEFORE touching the
+source object (the zero-overhead contract of `repro.obs.metrics` extends
+to these helpers — they sit on the halo/serve hot paths).
+
+`repro.dist` / `jax` are imported lazily inside functions so that
+``import repro.obs`` stays dependency-light and free of import cycles
+(`repro.dist.halo` itself imports `repro.obs.metrics`).
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, trace
+
+__all__ = [
+    "record_exchange",
+    "observe_plan_cache",
+    "record_blocked",
+    "record_delta_report",
+    "overlap_timeline",
+]
+
+
+def record_exchange(plan, d_feat: int, payload: str | None = None) -> None:
+    """Runtime twin of the dry-run ``exchange`` accounting
+    (`repro.launch.dryrun.exchange_accounting`): fold one halo exchange's
+    wire model for ``plan`` at feature width ``d_feat`` into the registry.
+
+    Gauges (bytes are per device per exchange, from
+    `repro.core.dataflow.ExchangeCost`): ``halo.rows_per_device`` per tier,
+    ``halo.wire_bytes_per_exchange``, ``halo.exposed_bytes_per_exchange``,
+    ``halo.payload_bits``, ``halo.overlap_fraction``, ``halo.wire_fraction``,
+    ``halo.compression_vs_fp32``, ``halo.boundary_rows_max_device``.
+    Counter ``halo.exchanges`` counts recorded exchanges."""
+    if not metrics.enabled():
+        return
+    from repro.core.dataflow import exchange_cost
+    from repro.core.quant import payload_bits
+
+    bits = payload_bits(payload)
+    ov = plan.overlap_fraction()
+    cost = exchange_cost(plan.halo_rows_per_device, d_feat, bits, ov)
+    metrics.inc("halo.exchanges")
+    metrics.set_gauge("halo.rows_per_device", plan.halo_rows_per_device,
+                      (("tier", "total"),))
+    metrics.set_gauge("halo.rows_per_device", plan.broadcast_rows_per_device,
+                      (("tier", "broadcast"),))
+    if plan.is_hierarchical:
+        metrics.set_gauge("halo.rows_per_device", plan.inter_pod_rows_crossing,
+                          (("tier", "inter_pod_crossing"),))
+        metrics.set_gauge("halo.rows_per_device", plan.intra_pod_rows_per_device,
+                          (("tier", "intra_pod"),))
+    metrics.set_gauge("halo.payload_bits", bits)
+    metrics.set_gauge("halo.overlap_fraction", ov)
+    metrics.set_gauge("halo.wire_fraction", plan.wire_fraction())
+    metrics.set_gauge("halo.wire_bytes_per_exchange", cost.wire_bytes)
+    metrics.set_gauge("halo.exposed_bytes_per_exchange", cost.exposed_bytes)
+    metrics.set_gauge("halo.compression_vs_fp32", cost.compression)
+    bnd = plan.boundary_rows_per_device()
+    metrics.set_gauge("halo.boundary_rows_max_device",
+                      int(bnd.max()) if bnd.size else 0)
+
+
+def observe_plan_cache() -> None:
+    """Mirror `repro.dist.halo.plan_cache_stats` into ``plan_cache.*``
+    gauges (hits, misses, evictions, size)."""
+    if not metrics.enabled():
+        return
+    from repro.dist.halo import plan_cache_stats
+
+    for key, v in plan_cache_stats().items():
+        metrics.set_gauge(f"plan_cache.{key}", v)
+
+
+def record_blocked(stats, scope: str = "plan") -> None:
+    """Fold a blocked-adjacency accounting record into ``bsr.*`` gauges.
+
+    ``stats`` is the dict from `repro.graph.structure.blocked_stats` /
+    `repro.dist.halo.plan_blocked_shape`, or a materialized
+    `repro.dist.halo.PlanBlockedAdjacency` (its ``stats()`` is used; its
+    ``lens.sum()`` IS ``nnz_blocks``, the executed-tile count). ``scope``
+    labels the series (e.g. ``plan``, ``interior``, ``boundary``,
+    ``global``)."""
+    if not metrics.enabled():
+        return
+    if not isinstance(stats, dict):
+        stats = stats.stats()
+    labels = (("scope", scope),)
+    metrics.set_gauge("bsr.executed_tiles", stats["nnz_blocks"], labels)
+    metrics.set_gauge("bsr.max_nnzb", stats["max_nnzb"], labels)
+    metrics.set_gauge("bsr.padded_tile_fraction",
+                      stats["padded_tile_fraction"], labels)
+    if "dense_tiles" in stats:
+        metrics.set_gauge("bsr.dense_tiles", stats["dense_tiles"], labels)
+
+
+def record_delta_report(report: dict) -> None:
+    """Fold a `repro.dist.delta.DeltaPlanner.apply` report into ``delta.*``
+    series: edit/remap counters, dirty-device gauge, the structural flag,
+    repair latency (``delta.apply_ms`` histogram, if timed), and the
+    executed-tile locality-drift gauge (``delta.drift_ratio``, if the
+    report measured drift)."""
+    if not metrics.enabled():
+        return
+    metrics.inc("delta.applies")
+    metrics.inc("delta.inserts", float(report.get("inserts", 0)))
+    metrics.inc("delta.deletes", float(report.get("deletes", 0)))
+    metrics.inc("delta.senders_remapped", float(report.get("senders_remapped", 0)))
+    metrics.inc("delta.blocked_patched", float(report.get("blocked_patched", 0)))
+    dirty = report.get("dirty_devices") or ()
+    metrics.set_gauge("delta.dirty_devices", len(dirty))
+    metrics.set_gauge("delta.structural", 1.0 if report.get("structural") else 0.0)
+    if "apply_ms" in report:
+        metrics.observe("delta.apply_ms", float(report["apply_ms"]))
+    if report.get("drift") is not None:
+        d = report["drift"]
+        metrics.set_gauge("delta.drift_ratio", d["drift_ratio"])
+        metrics.set_gauge("delta.executed_tiles_current", d["executed_tiles_current"])
+        metrics.set_gauge("delta.executed_tiles_reordered", d["executed_tiles_reordered"])
+
+
+def overlap_timeline(plan, feats, mesh, tracer=None, payload: str | None = None,
+                     steps: int = 3, via: str = "all_gather"):
+    """Record a trace that SHOWS the boundary collective hiding behind
+    interior compute — the overlapped schedule of docs/communication.md as
+    a Perfetto timeline instead of an exposed-bytes formula.
+
+    Runs the split schedule as three separately-jitted shard_map programs
+    over the relocated ``(k, n_local, d)`` feature blocks:
+
+      1. ``collect``  — the boundary collective alone
+         (`repro.dist.halo.halo_exchange` / ``hier_halo_exchange``),
+      2. ``interior`` — the wire-independent aggregation term (masked
+         weights, exactly `repro.dist.halo.split_halo_aggregate`'s
+         interior half),
+      3. ``combine``  — the boundary term + sum.
+
+    Each step dispatches (1) asynchronously, runs (2) inside a synced span
+    on the calling thread's track, THEN blocks on (1) and records it as a
+    complete event on the ``wire`` track spanning dispatch → ready. The
+    wire span therefore encloses the interior span whenever the collective
+    was still in flight while interior compute ran — which is exactly
+    JAX's async-dispatch overlap mechanism, honestly measured (span edges
+    use ``block_until_ready``; nothing is drawn that did not happen).
+    Returns the final ``(k, n_local, d)`` aggregate (bit-identical to the
+    serialized schedule, per the `split_halo_aggregate` contract)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.halo import halo_exchange, hier_halo_exchange
+    from repro.graph.ops import aggregate
+
+    if tracer is None:
+        tracer = trace.enable_tracing()
+    hier = plan.is_hierarchical
+    spec_axes = plan.axes if hier else plan.axes[0]
+    arrs = plan.device_arrays()
+    if hier:
+        send_tabs, (senders, receivers, edge_w) = arrs[:2], arrs[2:]
+    else:
+        send_tabs, (senders, receivers, edge_w) = arrs[:1], arrs[1:]
+    n_local = plan.n_local
+
+    def _smap(body, n_in):
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(spec_axes),) * n_in, out_specs=P(spec_axes),
+            check_vma=False,
+        ))
+
+    def collect_body(h, *tabs):
+        h = h[0]
+        if hier:
+            halo = hier_halo_exchange(h, tabs[0][0], tabs[1][0], plan.axes,
+                                      via=via, payload=payload)
+        else:
+            halo = halo_exchange(h, tabs[0][0], plan.axes[0],
+                                 via=via, payload=payload)
+        return halo[None]
+
+    def interior_body(h, s, r, w):
+        h, s, r, w = h[0], s[0], r[0], w[0]
+        w_int = jnp.where(s >= n_local, jnp.zeros((), w.dtype), w)
+        return aggregate(h, jnp.minimum(s, n_local - 1), r, n_local, w_int)[None]
+
+    def combine_body(halo, out_int, s, r, w):
+        halo, out_int, s, r, w = halo[0], out_int[0], s[0], r[0], w[0]
+        if halo.shape[0] == 0:
+            return out_int[None]
+        w_bnd = jnp.where(s >= n_local, w, jnp.zeros((), w.dtype))
+        bnd = aggregate(halo, jnp.clip(s - n_local, 0, halo.shape[0] - 1),
+                        r, n_local, w_bnd)
+        return (out_int + bnd)[None]
+
+    collect = _smap(collect_body, 1 + len(send_tabs))
+    interior = _smap(interior_body, 4)
+    combine = _smap(combine_body, 5)
+
+    # Compile all three programs outside the timed loop so the recorded
+    # steps show steady-state dispatch, not tracing/lowering time.
+    with tracer.span("overlap.compile") as h:
+        halo = collect(feats, *send_tabs)
+        out_int = interior(feats, senders, receivers, edge_w)
+        h.sync = combine(halo, out_int, senders, receivers, edge_w)
+
+    wire_tid = tracer.track_tid("wire")
+    out = None
+    for i in range(steps):
+        t0 = tracer.now_us()
+        halo = collect(feats, *send_tabs)              # async dispatch
+        with tracer.span("overlap.interior_compute", args={"step": i}) as h:
+            out_int = interior(feats, senders, receivers, edge_w)
+            h.sync = out_int
+        jax.block_until_ready(halo)
+        tracer.complete(
+            "halo.exchange.boundary_collective", t0, tracer.now_us() - t0,
+            tid=wire_tid,
+            args={"step": i, "rows_per_device": plan.halo_rows_per_device,
+                  "payload": payload or "fp32"},
+        )
+        with tracer.span("overlap.boundary_combine", args={"step": i}) as h:
+            out = combine(halo, out_int, senders, receivers, edge_w)
+            h.sync = out
+    record_exchange(plan, int(feats.shape[-1]), payload)
+    return out

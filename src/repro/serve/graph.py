@@ -55,6 +55,8 @@ from repro.dist.policy import NO_POLICY, ShardingPolicy
 from repro.graph.ops import aggregate_padded
 from repro.graph.structure import GraphData
 from repro.models.gcn import GCNConfig
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "GraphQuery",
@@ -588,13 +590,22 @@ class GraphBatcher:
         queries = self._pick_batch()
         if not queries:
             return []
+        if _obs_metrics.enabled():
+            t_pick = time.perf_counter()
+            for q in queries:
+                _obs_metrics.observe("serve.queue_wait_ms",
+                                     (t_pick - q.t_submit) * 1e3)
+            _obs_metrics.observe("serve.batch_occupancy",
+                                 len(queries) / max(self.batch_seeds, 1))
         seeds: list[int] = []
         row_of: dict[int, int] = {}
         for q in queries:
             if q.node not in row_of:
                 row_of[q.node] = len(seeds)
                 seeds.append(q.node)
-        blk = self.sampler.sample_block(np.asarray(seeds), self.batch_seeds, self.cache)
+        with _obs_trace.span("serve.sample", args={"seeds": len(seeds)}):
+            blk = self.sampler.sample_block(
+                np.asarray(seeds), self.batch_seeds, self.cache)
         x = np.zeros((self.max_nodes, self.features.shape[1]), np.float32)
         valid = blk.node_ids[: blk.n_nodes]
         x[: blk.n_nodes] = self.features[valid]
@@ -613,21 +624,26 @@ class GraphBatcher:
                 v[lc] = self.cache.peek(node, layer)
             masks.append(jnp.asarray(m))
             vals.append(jnp.asarray(v))
-        out, inter = self._fwd(
-            self.params,
-            jnp.asarray(x),
-            jnp.asarray(blk.senders),
-            jnp.asarray(blk.receivers),
-            jnp.asarray(blk.edge_weight),
-            tuple(masks),
-            tuple(vals),
-        )
+        with _obs_trace.span("serve.forward",
+                             args={"nodes": int(blk.n_nodes)}) as _sp:
+            out, inter = self._fwd(
+                self.params,
+                jnp.asarray(x),
+                jnp.asarray(blk.senders),
+                jnp.asarray(blk.receivers),
+                jnp.asarray(blk.edge_weight),
+                tuple(masks),
+                tuple(vals),
+            )
+            _sp.sync = out
         out = np.asarray(out)
         now = time.perf_counter()
         for q in queries:
             q.logits = out[row_of[q.node]]
             q.latency_s = now - q.t_submit
             q.micro_batch = self.micro_batches
+            if _obs_metrics.enabled():
+                _obs_metrics.observe("serve.latency_ms", q.latency_s * 1e3)
         self.finished.extend(queries)
         # Harvest hub activations (degree-ranked admission) for future hits.
         if self.cache is not None:
@@ -654,6 +670,12 @@ class GraphBatcher:
         self.queries_served += len(queries)
         self.nodes_sampled += blk.n_nodes
         self.edges_sampled += blk.n_edges
+        if _obs_metrics.enabled():
+            _obs_metrics.inc("serve.queries", float(len(queries)))
+            _obs_metrics.inc("serve.micro_batches")
+            if self.cache is not None:
+                _obs_metrics.set_gauge("serve.cache_hit_rate",
+                                       self.cache.hit_rate)
         return queries
 
     def run_until_drained(self, max_batches: int = 10_000) -> list[GraphQuery]:
@@ -762,4 +784,27 @@ class GraphBatcher:
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
+        return out
+
+    def export_metrics(self) -> dict[str, Any]:
+        """Mirror :meth:`stats` into the obs registry and return it.
+
+        The gauges carry the ENGINE's exact accounting (the sorted-latency
+        p50/p99, the cache's own hit counters) — not re-derivations — so an
+        exported snapshot equals ``stats()`` value for value; the obs-side
+        ``serve.latency_ms`` histogram percentiles are the bucketed
+        approximation of the same samples (both pinned in
+        `tests/test_obs_integration.py`). No-op (still returns the stats)
+        when metrics are disabled."""
+        out = self.stats()
+        if _obs_metrics.enabled():
+            _obs_metrics.set_gauge("serve.p50_ms", out["p50_ms"])
+            _obs_metrics.set_gauge("serve.p99_ms", out["p99_ms"])
+            _obs_metrics.set_gauge("serve.nodes_per_query", out["nodes_per_query"])
+            _obs_metrics.set_gauge("serve.edges_per_query", out["edges_per_query"])
+            _obs_metrics.set_gauge("serve.foreign_rows", out["foreign_rows"])
+            cache = out.get("cache")
+            if cache is not None:
+                _obs_metrics.set_gauge("serve.cache_hit_rate", cache["hit_rate"])
+                _obs_metrics.set_gauge("serve.cache_resident", cache["resident"])
         return out

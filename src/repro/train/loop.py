@@ -19,6 +19,8 @@ from typing import Any, Callable, Iterator
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.train.compression import error_feedback_update, int8_compress, int8_decompress
 from repro.train.optimizer import Optimizer
@@ -126,13 +128,18 @@ class Trainer:
             if self.step >= max_steps:
                 break
             t0 = time.perf_counter()
-            self.params, self.opt_state, self.residual, loss = self._step_fn(
-                self.params, self.opt_state, self.residual, batch
-            )
-            loss = float(loss)
+            with _obs_trace.span("train.step", args={"step": self.step}):
+                self.params, self.opt_state, self.residual, loss = self._step_fn(
+                    self.params, self.opt_state, self.residual, batch
+                )
+                loss = float(loss)      # blocks: the span covers device work
             dt = time.perf_counter() - t0
             self.step += 1
             losses.append(loss)
+            if _obs_metrics.enabled():
+                _obs_metrics.inc("train.steps")
+                _obs_metrics.observe("train.step_ms", dt * 1e3)
+                _obs_metrics.set_gauge("train.loss", loss)
             # ---- straggler monitor
             if self._ema_dt is not None and dt > self.cfg.straggler_factor * self._ema_dt:
                 self.straggler_events.append({"step": self.step, "dt": dt, "ema": self._ema_dt})

@@ -1,0 +1,262 @@
+"""repro.obs unit contracts (ISSUE 8 satellite):
+
+* deterministic snapshots — two identical recording runs produce
+  byte-identical ``to_json`` output,
+* histogram percentiles vs a numpy oracle — error bounded by the width of
+  the bucket the estimate falls in; p0/p100 exact,
+* Chrome trace-event schema — every complete event carries
+  ``ph``/``ts``/``dur``/``pid``/``tid`` and the export round-trips JSON,
+* the PINNED zero-overhead contract — with obs disabled, the module
+  helpers and the instrument recorders allocate nothing measurable on the
+  hot path.
+"""
+import json
+import sys
+from bisect import bisect_left
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics, trace
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    exponential_buckets,
+)
+from repro.obs.trace import TraceRecorder
+
+
+@pytest.fixture(autouse=True)
+def _isolate_obs():
+    """Never leak enabled obs state (or recorded series) into other tests."""
+    old_reg = metrics.set_default_registry(MetricsRegistry())
+    was_enabled = metrics.enabled()
+    metrics.disable()
+    old_tracer = trace.set_default_tracer(None)
+    yield
+    metrics.disable()
+    metrics.set_default_registry(old_reg)
+    if was_enabled:
+        metrics.enable()
+    trace.set_default_tracer(old_tracer)
+
+
+# ------------------------------------------------------------ instruments
+def test_counter_monotonic_and_rejects_negative():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_gauge_set_add():
+    g = Gauge()
+    g.set(4.0)
+    g.add(-1.5)
+    assert g.value == 2.5
+
+
+def test_registry_name_kind_conflict_is_error():
+    reg = MetricsRegistry()
+    reg.counter("x.events")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x.events")
+
+
+def test_labels_normalized_and_keyed():
+    reg = MetricsRegistry()
+    a = reg.counter("c", (("b", "2"), ("a", "1")))
+    b = reg.counter("c", {"a": 1, "b": 2})        # dict, ints — same series
+    assert a is b
+    assert "c{a=1,b=2}" in reg.snapshot()
+
+
+def test_exponential_buckets_validation():
+    assert len(exponential_buckets(1.0, 2.0, 4)) == 4
+    with pytest.raises(ValueError):
+        exponential_buckets(0.0, 2.0, 4)
+    with pytest.raises(ValueError):
+        exponential_buckets(1.0, 1.0, 4)
+
+
+# ------------------------------------------------- deterministic snapshots
+def _record(reg: MetricsRegistry) -> None:
+    reg.counter("halo.exchanges").inc(3)
+    reg.gauge("halo.wire_bytes_per_exchange").set(81920.0)
+    reg.gauge("bsr.executed_tiles", (("scope", "plan"),)).set(1305)
+    h = reg.histogram("serve.latency_ms")
+    for v in (0.3, 1.7, 2.2, 9.5, 0.3):
+        h.observe(v)
+
+
+def test_snapshot_deterministic_across_identical_runs(tmp_path):
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    _record(r1)
+    _record(r2)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    t1 = r1.to_json(str(p1))
+    t2 = r2.to_json(str(p2))
+    assert t1 == t2
+    assert p1.read_text() == p2.read_text()
+    # and the snapshot is sorted, JSON-round-trippable pure data
+    snap = json.loads(t1)
+    assert list(snap) == sorted(snap)
+    assert snap["halo.exchanges"] == {"type": "counter", "value": 3.0}
+
+
+def test_snapshot_insertion_order_independent():
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    r1.counter("a").inc()
+    r1.gauge("b").set(1)
+    r2.gauge("b").set(1)
+    r2.counter("a").inc()
+    assert r1.to_json() == r2.to_json()
+
+
+# ------------------------------------------------ histogram vs numpy oracle
+def _bucket_width_at(h: Histogram, value: float) -> float:
+    """Width of the histogram bucket containing ``value`` (clamped to the
+    recorded min/max, matching the interpolation rule)."""
+    i = bisect_left(h.bounds, value)
+    lo = h.bounds[i - 1] if i > 0 else h.min
+    hi = h.bounds[i] if i < len(h.bounds) else h.max
+    return max(min(hi, h.max) - max(lo, h.min), 0.0)
+
+
+@pytest.mark.parametrize("seed,scale", [(0, 1.0), (1, 37.0), (2, 0.004)])
+def test_percentiles_within_one_bucket_of_numpy(seed, scale):
+    rng = np.random.default_rng(seed)
+    data = rng.lognormal(mean=0.0, sigma=1.2, size=4000) * scale
+    h = Histogram()
+    for v in data:
+        h.observe(float(v))
+    for p in (1, 10, 25, 50, 75, 90, 99):
+        oracle = float(np.percentile(data, p))
+        est = h.percentile(p)
+        width = max(_bucket_width_at(h, oracle), _bucket_width_at(h, est))
+        assert abs(est - oracle) <= width, (p, est, oracle, width)
+    assert h.percentile(0) == pytest.approx(float(data.min()))
+    assert h.percentile(100) == pytest.approx(float(data.max()))
+    assert h.count == len(data)
+    assert h.mean == pytest.approx(float(data.mean()))
+
+
+def test_histogram_single_value_stays_exact():
+    h = Histogram()
+    for _ in range(10):
+        h.observe(3.25)
+    for p in (0, 50, 99, 100):
+        assert h.percentile(p) == 3.25
+
+
+def test_empty_histogram_and_bad_percentile():
+    h = Histogram()
+    assert h.percentile(50) == 0.0
+    with pytest.raises(ValueError):
+        h.percentile(101)
+
+
+# --------------------------------------------------- chrome trace schema
+def test_chrome_trace_schema_and_roundtrip(tmp_path):
+    tr = TraceRecorder(process_name="test")
+    with tr.span("layer.op", args={"k": 8}):
+        pass
+    with tr.span("layer.tracked", track="wire"):
+        pass
+    tr.complete("layer.raw", ts_us=10.0, dur_us=5.0, tid=tr.track_tid("wire"))
+    tr.instant("layer.event", {"n": 1})
+    tr.counter("layer.gauge", {"v": 2})
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    ev = doc["traceEvents"]
+    assert {e["ph"] for e in ev} >= {"X", "M", "i", "C"}
+    for e in ev:
+        assert {"name", "ph", "pid", "tid"} <= set(e), e
+        if e["ph"] == "X":
+            assert "ts" in e and "dur" in e and e["dur"] >= 0.0, e
+        if e["ph"] in ("i", "C"):
+            assert "ts" in e
+    # the logical track got a thread_name metadata row and its own tid
+    names = [e for e in ev if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert any(e["args"]["name"] == "wire" for e in names)
+    wire_tid = tr.track_tid("wire")
+    assert wire_tid != tr._thread_tid()
+    spans = {e["name"]: e for e in ev if e["ph"] == "X"}
+    assert spans["layer.tracked"]["tid"] == wire_tid
+    assert spans["layer.op"]["args"] == {"k": 8}
+
+
+def test_traced_decorator_and_module_span():
+    tr = trace.enable_tracing()
+
+    @trace.traced("layer.fn")
+    def fn(x):
+        return x + 1
+
+    assert fn(1) == 2
+    with trace.span("layer.block") as h:
+        h.args["note"] = "v"
+    names = [e["name"] for e in tr.events() if e["ph"] == "X"]
+    assert "layer.fn" in names and "layer.block" in names
+    trace.disable_tracing()
+    assert trace.export("/dev/null") is False
+
+
+def test_disabled_span_is_reused_singleton():
+    s1 = trace.span("a")
+    s2 = trace.span("b")
+    assert s1 is s2                     # no per-call allocation
+    with s1 as h:
+        h.sync = object()               # accepted, dropped on exit
+    assert h.sync is None
+
+
+# ---------------------------------------------- pinned zero-overhead path
+def test_disabled_helpers_allocate_nothing():
+    """PINNED: with obs disabled, the per-event helpers on the halo/serve
+    hot loops must be allocation-free (one global read + return). Measured
+    as allocated-block growth over 10k calls of each helper — anything
+    per-call would show up as >= 10k blocks."""
+    from repro.obs.instrument import observe_plan_cache, record_exchange
+
+    assert not metrics.enabled()
+    for _ in range(200):  # warm any lazy caches
+        metrics.inc("x")
+        metrics.set_gauge("y", 1.0)
+        metrics.observe("z", 0.5)
+        record_exchange(None, 64)       # early-returns before touching plan
+        observe_plan_cache()
+        with trace.span("s"):
+            pass
+    before = sys.getallocatedblocks()
+    for _ in range(10_000):
+        metrics.inc("x")
+        metrics.set_gauge("y", 1.0)
+        metrics.observe("z", 0.5)
+        record_exchange(None, 64)
+        observe_plan_cache()
+        with trace.span("s"):
+            pass
+    grown = sys.getallocatedblocks() - before
+    assert grown < 50, f"disabled obs path allocated {grown} blocks / 10k calls"
+    assert len(metrics.default_registry()) == 0
+
+
+def test_enable_disable_routing():
+    reg = metrics.enable(MetricsRegistry())
+    metrics.inc("c", 2.0)
+    metrics.set_gauge("g", 7.0, {"scope": "t"})
+    metrics.observe("h", 1.0)
+    snap = metrics.snapshot()
+    assert snap["c"]["value"] == 2.0
+    assert snap["g{scope=t}"]["value"] == 7.0
+    assert snap["h"]["count"] == 1
+    metrics.disable()
+    metrics.inc("c", 5.0)
+    assert reg.snapshot()["c"]["value"] == 2.0  # no-op while disabled

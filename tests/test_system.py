@@ -125,13 +125,22 @@ def test_compressed_psum_subprocess():
 
 
 def test_dryrun_results_complete_if_present():
-    """If the sweep has been run, every assigned cell must be OK or a
-    documented SKIP (the multi-pod dry-run contract)."""
+    """If the base 16x16 sweep has been run, every assigned cell must be OK
+    or a documented SKIP (the multi-pod dry-run contract). A results file
+    that only holds tagged variant records (e.g. '+opt+bf16' re-runs) is a
+    resumable file whose base sweep has NOT been executed yet — the same
+    skip as no file at all, not a failure. Normalizes both results schemas
+    (v1 bare list, v2 wrapper) inline rather than importing
+    `repro.launch.dryrun.load_results`: that module pins XLA_FLAGS to 512
+    host devices at import, which must not leak into this process's env."""
     path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
     if not os.path.exists(path):
         pytest.skip("dry-run sweep not yet executed")
-    recs = json.load(open(path))
+    data = json.load(open(path))
+    recs = data.get("records", []) if isinstance(data, dict) else data
     singles = [r for r in recs if r["mesh"] == "16x16"]
+    if not singles:
+        pytest.skip("base 16x16 dry-run sweep not yet executed")
     assert len(singles) >= 40
     bad = [r for r in singles if r["status"] == "FAIL"]
     assert not bad, [(r["arch"], r["shape"], r.get("error")) for r in bad]

@@ -1,0 +1,150 @@
+"""Gate fresh BENCH_* artifacts against the pinned baselines.
+
+CI regenerates BENCH_comm.json / BENCH_kernels.json / BENCH_delta.json on
+every run (the benches are pinned-seed, so their *accounting* numbers are
+deterministic) and this tool compares them against the checked-in copies
+under ``benchmarks/baselines/``:
+
+* **deterministic values** (wire bytes, overlap fractions, nnz/executed
+  tile counts, remap counts, case configs) must match EXACTLY — any drift
+  means the comm/kernels/delta accounting changed and either a bug slipped
+  in or the baseline must be consciously re-pinned with the PR;
+* **timing values** (``*_ms`` / ``*_s`` leaves) are machine-dependent and
+  are skipped;
+* **derived speed ratios** (the delta bench's ``speedup``) get a loose
+  floor: at least half the baseline ratio AND an absolute minimum, so a
+  10× regression fails without flaking on runner noise.
+
+Usage (kind inferred from the file name ``BENCH_<kind>.json``):
+
+    python tools/bench_check.py BENCH_comm.json BENCH_kernels.json BENCH_delta.json
+    python tools/bench_check.py BENCH_delta.json --baseline-dir benchmarks/baselines
+
+Exit code 0 = all artifacts within tolerance, 1 = regression (or a
+baseline key missing from the fresh artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import re
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "baselines")
+
+# Leaf names that are wall-clock measurements: never compared exactly.
+TIMING_SUFFIXES = ("_ms", "_s", "_us")
+
+# Per-kind overrides, keyed by the flattened dotted path's LEAF name.
+#   ("skip",)                — ignore entirely
+#   ("min", floor, frac)     — fresh >= max(floor, baseline * frac)
+KIND_RULES = {
+    "comm": {},
+    "kernels": {},
+    "delta": {
+        "speedup": ("min", 5.0, 0.5),
+    },
+    "obs": {},
+}
+
+
+def flatten(obj, prefix: str = "") -> dict:
+    """``{"a": {"b": [1, 2]}}`` → ``{"a.b.0": 1, "a.b.1": 2}``."""
+    out: dict = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}.{i}" if prefix else str(i)))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def _is_timing(path: str) -> bool:
+    leaf = path.rsplit(".", 1)[-1]
+    return leaf.endswith(TIMING_SUFFIXES)
+
+
+def _values_match(base, fresh) -> bool:
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        return base == fresh
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        return math.isclose(float(base), float(fresh), rel_tol=1e-6, abs_tol=1e-9)
+    return base == fresh
+
+
+def check_artifact(fresh_path: str, baseline_path: str, kind: str) -> list[str]:
+    """Compare one artifact; returns a list of human-readable violations."""
+    with open(fresh_path) as f:
+        fresh = flatten(json.load(f))
+    with open(baseline_path) as f:
+        base = flatten(json.load(f))
+    rules = KIND_RULES.get(kind, {})
+    errors = []
+    for path, bval in sorted(base.items()):
+        leaf = path.rsplit(".", 1)[-1]
+        rule = rules.get(leaf, rules.get(path))
+        if rule and rule[0] == "skip":
+            continue
+        if path not in fresh:
+            errors.append(f"{path}: missing from fresh artifact (baseline={bval!r})")
+            continue
+        fval = fresh[path]
+        if rule and rule[0] == "min":
+            _, floor, frac = rule
+            need = max(floor, float(bval) * frac)
+            if float(fval) < need:
+                errors.append(
+                    f"{path}: {fval:.3g} below floor {need:.3g} "
+                    f"(baseline {float(bval):.3g}, tolerance ×{frac})")
+            continue
+        if _is_timing(path):
+            continue
+        if not _values_match(bval, fval):
+            errors.append(f"{path}: fresh={fval!r} != baseline={bval!r}")
+    return errors
+
+
+def infer_kind(path: str) -> str:
+    m = re.search(r"BENCH_(\w+)\.json$", os.path.basename(path))
+    if not m or m.group(1) not in KIND_RULES:
+        raise SystemExit(
+            f"{path}: cannot infer artifact kind "
+            f"(expected BENCH_<{'|'.join(KIND_RULES)}>.json; use --kind)")
+    return m.group(1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="+", help="fresh BENCH_<kind>.json files")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="directory holding the pinned BENCH_<kind>.json copies")
+    ap.add_argument("--kind", default=None,
+                    help="override the kind inferred from the file name")
+    args = ap.parse_args(argv)
+
+    failed = 0
+    for path in args.artifacts:
+        kind = args.kind or infer_kind(path)
+        baseline = os.path.join(args.baseline_dir, f"BENCH_{kind}.json")
+        if not os.path.exists(baseline):
+            print(f"SKIP {path}: no pinned baseline at {baseline}")
+            continue
+        errors = check_artifact(path, baseline, kind)
+        if errors:
+            failed += 1
+            print(f"FAIL {path} vs {baseline}:")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"OK   {path} matches {baseline} "
+                  f"(timing leaves skipped, ratios within tolerance)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
