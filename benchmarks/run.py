@@ -20,6 +20,7 @@ def main(argv=None) -> None:
     from benchmarks.comm_bench import comm_rows
     from benchmarks.delta_bench import delta_rows
     from benchmarks.obs_bench import obs_rows
+    from benchmarks.relocal_bench import relocal_rows
     from benchmarks.fig07_quant import fig07_quant_accuracy
     from benchmarks.kernel_bench import bench_kernels_rows, kernel_rows, spmm_compare_rows
     from benchmarks.serve_bench import serve_rows
@@ -54,6 +55,7 @@ def main(argv=None) -> None:
         ("comm-tier", comm_tier_rows),
         ("comm", comm_rows),
         ("delta", delta_rows),
+        ("relocal", relocal_rows),
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),

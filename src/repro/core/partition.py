@@ -24,6 +24,7 @@ import numpy as np
 __all__ = [
     "Partition",
     "partition_graph",
+    "partition_from_assignment",
     "measured_probabilities",
     "refine_partition",
     "bfs_traversal_order",
@@ -282,6 +283,33 @@ def partition_graph(
         part_sizes=np.bincount(assignment, minlength=k).astype(np.int64),
         edge_counts=counts,
         n_nodes=int(n_nodes),
+        n_edges=int(src.shape[0]),
+    )
+
+
+def partition_from_assignment(
+    assignment: np.ndarray,
+    k: int,
+    edge_index: np.ndarray,
+) -> Partition:
+    """Wrap an externally-computed node→CE assignment as a :class:`Partition`.
+
+    Online re-localization (`repro.dist.delta.DeltaPlanner.relocalize`)
+    derives its assignment from a BFS locality order of the MUTATED edge
+    list rather than from any `partition_graph` method; this constructor
+    attaches the edge statistics every Partition consumer expects (the same
+    tail `partition_graph` runs on its own assignments).
+    """
+    assignment = np.asarray(assignment, dtype=np.int32)
+    src = np.asarray(edge_index[0], dtype=np.int64)
+    dst = np.asarray(edge_index[1], dtype=np.int64)
+    counts = _edge_count_matrix(assignment, int(k), src, dst)
+    return Partition(
+        assignment=assignment,
+        k=int(k),
+        part_sizes=np.bincount(assignment, minlength=k).astype(np.int64),
+        edge_counts=counts,
+        n_nodes=int(assignment.shape[0]),
         n_edges=int(src.shape[0]),
     )
 

@@ -39,6 +39,16 @@ rows keep their exact neighbor order, which is what makes
 invalidation sound. `delta_update_blocked_adjacency` applies the same
 tile-patching to a standalone global `BlockedAdjacency`.
 
+Incremental repair keeps plans CORRECT under churn, but not GOOD: the
+blocked node order degrades (executed tiles creep back toward the shuffled
+baseline) and pads only ever grow. Online maintenance closes that loop
+(docs/communication.md §8): `RelocalizePolicy` watches the
+``locality_drift`` ratio with hysteresis and triggers
+:meth:`DeltaPlanner.relocalize` — an in-place re-localization that installs
+a fresh BFS-derived balanced partition, rebuilds every materialized plan,
+and re-keys the cache — while :meth:`DeltaPlanner.compact` shrinks pads and
+tile capacities from their high-water marks back to current occupancy.
+
 The whole module is pinned by the delta-vs-rebuild differential harness
 (`tests/_delta_oracle.py` / `tests/test_graph_delta.py`): every random
 mutation step asserts the repaired structures match a from-scratch rebuild.
@@ -51,11 +61,14 @@ import time
 
 import numpy as np
 
+from repro.core.partition import partition_from_assignment
 from repro.dist.halo import (
     HaloPlan,
+    PlanLayout,
     _blocked_layout,
     graph_fingerprint,
     invalidate_halo_plans,
+    plan_layout,
     register_halo_plan,
 )
 from repro.graph.structure import BlockedAdjacency, GraphData
@@ -65,6 +78,7 @@ from repro.obs import trace as _obs_trace
 __all__ = [
     "GraphDelta",
     "DeltaPlanner",
+    "RelocalizePolicy",
     "apply_delta_to_graph",
     "delta_update_blocked_adjacency",
 ]
@@ -362,6 +376,77 @@ def delta_update_blocked_adjacency(
     return ba
 
 
+# ========================================================== re-localization
+def _relocalized_assignment(
+    n: int, edge_index: np.ndarray, k: int, *,
+    block: int = 128, method: str = "bfs",
+) -> np.ndarray:
+    """The node→device assignment an online re-localization installs.
+
+    Edges are first CANONICALIZED (lexsorted by (src, dst)) so the result is
+    a pure function of the edge MULTISET — the planner's store groups edges
+    by receiver device, a fresh builder sees them in input order, and
+    `locality_block_order`'s BFS tie-breaks on edge order. Canonicalization
+    is what makes ``drift_ratio == 1.0`` hold EXACTLY right after
+    :meth:`DeltaPlanner.relocalize`: the drift denominator and the installed
+    order are the same deterministic construction, however the edges happen
+    to be stored. The locality order is then cut into k balanced contiguous
+    chunks (devices keep equal loads; BFS neighbors stay co-resident).
+    """
+    from repro.graph.structure import locality_block_order
+
+    ei = np.asarray(edge_index, np.int64)
+    canon = ei[:, np.lexsort((ei[1], ei[0]))]
+    order = np.asarray(
+        locality_block_order(n, canon, block, method=method), np.int64)
+    bounds = np.linspace(0, n, k + 1).astype(np.int64)
+    assignment = np.empty(n, np.int32)
+    for i in range(k):
+        assignment[order[bounds[i]:bounds[i + 1]]] = i
+    return assignment
+
+
+@dataclasses.dataclass
+class RelocalizePolicy:
+    """Hysteresis trigger for online re-localization (ISSUE 9 / ROADMAP).
+
+    Attached to a :class:`DeltaPlanner`, the policy observes the
+    ``drift_ratio`` after every edge-mutating apply and fires — i.e. the
+    planner runs :meth:`DeltaPlanner.relocalize` — only when the ratio has
+    exceeded ``threshold`` for ``patience`` CONSECUTIVE structural applies
+    (one sub-threshold reading resets the streak). After firing, the next
+    ``cooldown`` observations are ignored entirely, so a burst of churn
+    cannot re-trigger while the fresh order is still settling.
+
+    ``block``/``method`` parameterize both the drift measurement and the
+    re-localization itself — they MUST agree, or post-fire drift is not
+    exactly 1.0.
+    """
+
+    threshold: float = 1.25
+    patience: int = 3
+    cooldown: int = 10
+    block: int = 128
+    method: str = "bfs"
+    streak: int = 0
+    cooldown_left: int = 0
+
+    def observe(self, drift_ratio: float) -> bool:
+        """Feed one drift reading; True ⇒ the caller should relocalize."""
+        if self.cooldown_left > 0:
+            self.cooldown_left -= 1
+            return False
+        if drift_ratio > self.threshold:
+            self.streak += 1
+        else:
+            self.streak = 0
+        if self.streak >= self.patience:
+            self.streak = 0
+            self.cooldown_left = self.cooldown
+            return True
+        return False
+
+
 # =============================================================== DeltaPlanner
 @dataclasses.dataclass
 class _TierState:
@@ -418,7 +503,9 @@ class DeltaPlanner:
     """
 
     def __init__(self, part, edge_index: np.ndarray,
-                 w: np.ndarray | None = None, *, graph_key: str | None = None):
+                 w: np.ndarray | None = None, *, graph_key: str | None = None,
+                 relocalize_policy: "RelocalizePolicy | None" = None):
+        self.part = part
         self.assignment = np.asarray(part.assignment, np.int64)
         self.k = int(part.k)
         self.n = int(part.n_nodes)
@@ -429,6 +516,20 @@ class DeltaPlanner:
         self.base_key = (graph_fingerprint(self.n, edge_index, w, self.assignment)
                          if graph_key is None else graph_key)
         self.version = 0
+        self.relocalize_policy = relocalize_policy
+        # (block, method) → (era, executed_tiles_reordered): the memoized
+        # fresh-reorder denominator of `locality_drift`. The era advances on
+        # structural applies and rebuilds, so non-structural applies reuse
+        # the BFS result instead of re-running it per apply.
+        self._drift_era = 0
+        self._drift_memo: dict[tuple[int, str], tuple[int, int]] = {}
+        self._init_layout()
+        self._init_store(src, dst, w)
+        self._tiers: dict[tuple[str, int], _TierState] = {}
+        self._plans: dict[object, HaloPlan] = {}
+
+    def _init_layout(self) -> None:
+        """(Re)derive the blocked layout from ``self.assignment``."""
         perm, sizes, n_local, local = _blocked_layout(self.assignment, self.k, self.n)
         self.perm, self.part_sizes, self.n_local, self.local = perm, sizes, n_local, local
         # node_of[b, local_row] — inverse of `local` per device block.
@@ -438,9 +539,13 @@ class DeltaPlanner:
             sz = int(sizes[b])
             self.node_of[b, :sz] = perm[off:off + sz]
             off += sz
-        # Per-receiver-device edge store, same stable grouping as
-        # `_group_edges_by_receiver` so the first materialized plan is
-        # bit-identical to `build_halo_plan`.
+
+    def _init_store(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray) -> None:
+        """(Re)build the per-receiver-device edge store — same stable
+        grouping as `_group_edges_by_receiver`, so the first materialized
+        plan is bit-identical to `build_halo_plan`."""
+        e = int(src.shape[0])
+        local = self.local
         a_d = self.assignment[dst]
         counts = np.bincount(a_d, minlength=self.k).astype(np.int64)
         self.e_local = max(int(counts.max()) if e else 0, 1)
@@ -462,8 +567,6 @@ class DeltaPlanner:
             for b, sl, u, v in zip(own.tolist(), slot.tolist(),
                                    src[order].tolist(), dst[order].tolist()):
                 self._pos[b].setdefault((u, v), []).append(sl)
-        self._tiers: dict[tuple[str, int], _TierState] = {}
-        self._plans: dict[object, HaloPlan] = {}
         self._new_cut: np.ndarray | None = None
 
     # ------------------------------------------------------------- identity
@@ -483,6 +586,11 @@ class DeltaPlanner:
                 for b in range(self.k)]
         return (np.concatenate(cols, axis=1) if cols
                 else np.zeros((2, 0), np.int64))
+
+    def edge_weights(self) -> np.ndarray:
+        """Current (E,) weights, aligned with :meth:`edge_index`'s order."""
+        return np.concatenate(
+            [self._w[b, :self._cnt[b]] for b in range(self.k)])
 
     # ----------------------------------------------------------------- tiers
     def _tier_member(self, kind: str, pods: int, a_s, a_d):
@@ -904,6 +1012,17 @@ class DeltaPlanner:
                 axes, pods = key_axes
                 register_halo_plan(self.graph_key, self.k, axes,
                                    pods=pods, plan=p)
+        if pads_grown:
+            # structural apply: the halo column space changed, so the
+            # memoized fresh-reorder drift denominator is refreshed too
+            self._drift_era += 1
+        pol = self.relocalize_policy
+        edge_ops = bool(n_ins or delta.edge_deletes.shape[1])
+        # the policy watches drift at ITS OWN granularity (pol.block, the
+        # tile size it would re-localize at) — not the report's drift_block
+        pol_drift = (self.locality_drift(pol.block, method=pol.method)
+                     if pol is not None and edge_ops else None)
+        drift = self.locality_drift(drift_block) if measure_drift else pol_drift
         report = {
             "graph_key": self.graph_key,
             "version": self.version,
@@ -919,8 +1038,15 @@ class DeltaPlanner:
             "stale_keys_evicted": evicted,
             "structural": bool(pads_grown),
             "apply_ms": (time.perf_counter() - t_apply) * 1e3,
-            "drift": self.locality_drift(drift_block) if measure_drift else None,
+            "drift": drift,
+            "relocalized": None,
         }
+        if (pol is not None and edge_ops
+                and pol.observe(pol_drift["drift_ratio"])):
+            report["relocalized"] = self.relocalize(
+                block=pol.block, method=pol.method)
+            report["graph_key"] = self.graph_key
+            report["version"] = self.version
         if _obs_metrics.enabled():
             from repro.obs.instrument import record_delta_report
 
@@ -931,7 +1057,7 @@ class DeltaPlanner:
         })
         return report
 
-    def locality_drift(self, block: int = 128) -> dict:
+    def locality_drift(self, block: int = 128, method: str = "bfs") -> dict:
         """Executed-tile locality drift of the mutated graph (the ROADMAP
         drift-metrics item): how much blocked-layout quality the CURRENT
         node order has lost to mutations, measured in the executed-tile
@@ -943,26 +1069,37 @@ class DeltaPlanner:
           * ``executed_tiles_current``   — edges relabeled by the planner's
             live blocked layout (``perm``, the order every patched blocked
             table tiles over),
-          * ``executed_tiles_reordered`` — edges relabeled by a FRESH
-            `repro.graph.structure.locality_block_order` (method="bfs") of
-            the mutated graph.
+          * ``executed_tiles_reordered`` — edges relabeled by the order an
+            online re-localization WOULD install: the canonicalized
+            `repro.graph.structure.locality_block_order` of the mutated
+            graph, cut into k balanced device chunks
+            (`_relocalized_assignment` — the exact construction
+            :meth:`relocalize` runs, so right after a re-localization the
+            two sides coincide and ``drift_ratio == 1.0`` exactly).
 
         ``drift_ratio = current / reordered`` — 1.0 means the standing
-        order is still as tile-dense as a re-islandization; growth beyond a
-        caller-chosen threshold is the re-block trigger. Mirrored into the
+        order is still as tile-dense as a re-localization would be; growth
+        beyond a caller-chosen threshold (see :class:`RelocalizePolicy`) is
+        the re-localize trigger. The ``reordered`` term is memoized per
+        drift era — non-structural applies reuse it instead of re-running
+        BFS; structural applies, :meth:`relocalize`, and :meth:`compact`
+        rebuilds advance the era and refresh it. Mirrored into the
         ``delta.drift_ratio`` gauge when metrics are enabled."""
-        from repro.graph.structure import (
-            blocked_stats,
-            locality_block_order,
-            permute_edge_index,
-        )
+        from repro.graph.structure import blocked_stats, permute_edge_index
 
         ei = self.edge_index()
         cur_edges = permute_edge_index(self.perm, ei)
         current = blocked_stats(self.n, cur_edges, block)["nnz_blocks"]
-        fresh = locality_block_order(self.n, ei, block, method="bfs")
-        new_edges = permute_edge_index(fresh, ei)
-        reordered = blocked_stats(self.n, new_edges, block)["nnz_blocks"]
+        memo = self._drift_memo.get((block, method))
+        if memo is not None and memo[0] == self._drift_era:
+            reordered = memo[1]
+        else:
+            fresh_a = _relocalized_assignment(
+                self.n, ei, self.k, block=block, method=method)
+            fresh_perm = np.argsort(fresh_a, kind="stable").astype(np.int64)
+            reordered = int(blocked_stats(
+                self.n, permute_edge_index(fresh_perm, ei), block)["nnz_blocks"])
+            self._drift_memo[(block, method)] = (self._drift_era, reordered)
         drift = {
             "block": block,
             "executed_tiles_current": int(current),
@@ -974,6 +1111,234 @@ class DeltaPlanner:
             _obs_metrics.set_gauge("delta.executed_tiles_current", current)
             _obs_metrics.set_gauge("delta.executed_tiles_reordered", reordered)
         return drift
+
+    # -------------------------------------------------- online maintenance
+    def _host_bytes(self) -> int:
+        """Host bytes held by the store, the plan tables, and the memoized
+        blocked tiles — the pad-compaction accounting currency."""
+        total = self._src.nbytes + self._dst.nbytes + self._w.nbytes
+        for p in self._plans.values():
+            total += p.senders_l.nbytes + p.send_idx.nbytes
+            if p.send_loc is not None:
+                total += p.send_loc.nbytes
+            if p.send_rem is not None:
+                total += p.send_rem.nbytes
+            for key, entry in (p.__dict__.get("_blocked_cache") or {}).items():
+                tabs = (entry if isinstance(key, tuple) and key[0] == "split"
+                        else (entry,))
+                for t in tabs:
+                    total += t.vals.nbytes + t.cols.nbytes + t.lens.nbytes
+        return total
+
+    def _rebuild_in_place(self, assignment: np.ndarray, part,
+                          edge_index: np.ndarray, w: np.ndarray) -> None:
+        """Swap in a (possibly new) assignment and rebuild everything tight:
+        layout, edge store, tiers (fresh pads = exact occupancy), and every
+        materialized plan — IN PLACE, preserving plan object identity so
+        callers holding a plan reference keep working. Bumps the version and
+        migrates the plan-cache entries to the new key."""
+        old_key = self.graph_key
+        self.part = part
+        self.assignment = np.asarray(assignment, np.int64)
+        self._init_layout()
+        self._init_store(np.asarray(edge_index[0], np.int64),
+                         np.asarray(edge_index[1], np.int64),
+                         np.asarray(w, np.float32))
+        tier_keys = list(self._tiers)
+        self._tiers = {}
+        for kind, pods in tier_keys:
+            self._ensure_tier(kind, pods)
+        for p in self._plans.values():
+            q = self._materialize_plan(p.axes, p.n_pods)
+            p.__dict__.pop("_blocked_cache", None)
+            p.__dict__.pop("_edge_locality_cache", None)
+            for f in dataclasses.fields(HaloPlan):
+                setattr(p, f.name, getattr(q, f.name))
+        self.version += 1
+        self._drift_era += 1
+        self._drift_memo.clear()
+        invalidate_halo_plans(old_key)
+        for key_axes, p in self._plans.items():
+            if isinstance(key_axes, str):
+                register_halo_plan(self.graph_key, self.k, key_axes, plan=p)
+            else:
+                axes, pods = key_axes
+                register_halo_plan(self.graph_key, self.k, axes,
+                                   pods=pods, plan=p)
+
+    def relocalize(self, *, block: int = 128, method: str = "bfs") -> dict:
+        """Online re-localization: install a fresh locality order on the
+        MUTATED graph, in place (docs/communication.md §8).
+
+        Recomputes `locality_block_order` on the current edges (canonical
+        form, `_relocalized_assignment`), cuts it into k balanced device
+        chunks, and rebuilds layout, store, tiers, and every materialized
+        plan under the new order — pads drop to exact occupancy, blocked
+        caches rebuild lazily and tight, and the plan cache re-keys to the
+        next version. Returns a report carrying ``old_layout`` — a frozen
+        :class:`repro.dist.halo.PlanLayout` of the PRE-relocalize blocked
+        layout, which is exactly what `repro.train.elastic.relocate_state_tree`
+        needs to move live per-node training state (params, optimizer
+        moments) into the new row order. Forward results are bit-equivalent
+        before vs. after modulo row order (the subprocess equivalence test).
+
+        Immediately afterwards ``locality_drift(block, method) == 1.0``
+        exactly: the installed order IS the drift denominator's
+        construction, and the memo is seeded with the just-measured tiles.
+        """
+        t0 = time.perf_counter()
+        with _obs_trace.span("delta.relocalize", args={"block": block}):
+            from repro.graph.structure import blocked_stats, permute_edge_index
+
+            ei = self.edge_index()
+            w = self.edge_weights()
+            old_layout = plan_layout(self)
+            tiles_before = int(blocked_stats(
+                self.n, permute_edge_index(self.perm, ei), block)["nnz_blocks"])
+            pads_before = {f"{kind}/{pods}": ts.pad
+                           for (kind, pods), ts in self._tiers.items()}
+            assignment = _relocalized_assignment(
+                self.n, ei, self.k, block=block, method=method)
+            part = partition_from_assignment(assignment, self.k, ei)
+            self._rebuild_in_place(assignment, part, ei, w)
+            tiles_after = int(blocked_stats(
+                self.n, permute_edge_index(self.perm, ei), block)["nnz_blocks"])
+            # the installed order is the drift denominator's construction —
+            # seed the memo so the next drift read costs no BFS
+            self._drift_memo[(block, method)] = (self._drift_era, tiles_after)
+            report = {
+                "graph_key": self.graph_key,
+                "version": self.version,
+                "block": block,
+                "method": method,
+                "executed_tiles_before": tiles_before,
+                "executed_tiles_after": tiles_after,
+                "pads_before": pads_before,
+                "pads_after": {f"{kind}/{pods}": ts.pad
+                               for (kind, pods), ts in self._tiers.items()},
+                "old_layout": old_layout,
+                "relocalize_ms": (time.perf_counter() - t0) * 1e3,
+            }
+        if _obs_metrics.enabled():
+            from repro.obs.instrument import record_relocalize_report
+
+            record_relocalize_report(report)
+        return report
+
+    def _tight(self) -> tuple[bool, list]:
+        """(planner tight?, loose blocked-cache entries).
+
+        Tight = no reclaimable slack anywhere: every tier is hole-free with
+        pad == occupancy and builder-canonical (sorted) slot order, and the
+        store capacity equals the live max. Loose blocked entries are cache
+        keys whose tile capacity exceeds the live ragged maximum."""
+        store_tight = self.e_local == max(int(self._cnt.max(initial=0)), 1)
+        tiers_tight = all(
+            not any(ts.free)
+            and all(x >= 0 for ex in ts.exports for x in ex)
+            and all(ex == sorted(ex) for ex in ts.exports)
+            and ts.pad == max((len(ex) for ex in ts.exports), default=0)
+            for ts in self._tiers.values())
+        loose = []
+        for p in self._plans.values():
+            cache = p.__dict__.get("_blocked_cache")
+            if not cache:
+                continue
+            for key, entry in cache.items():
+                tabs = (entry if isinstance(key, tuple) and key[0] == "split"
+                        else (entry,))
+                if any(t.max_nnzb > max(int(t.lens.max(initial=0)), 1)
+                       for t in tabs):
+                    loose.append((p, key))
+        return store_tight and tiers_tight, loose
+
+    def compact(self) -> dict:
+        """Shrink pads and tile capacities from their high-water marks back
+        to current occupancy (docs/communication.md §8).
+
+        Three outcomes, cheapest wins:
+
+          * everything already tight → full no-op (``changed=False``; no
+            version bump, plans untouched — a v0 planner stays bit-identical
+            to `build_halo_plan`),
+          * planner tight but some memoized blocked tables over-provisioned
+            → drop just those cache entries (they rebuild lazily and tight;
+            no version bump — the plan TABLES are unchanged),
+          * otherwise → full in-place rebuild under the CURRENT assignment:
+            slot heaps re-pack, survivors remap, pads drop to exact
+            occupancy, and the plan cache re-keys to the next version
+            (receivers still hold the old key's plans — same contract as a
+            structural apply).
+
+        Returns a report with per-tier ``pad_rows_reclaimed`` and
+        ``bytes_reclaimed`` (host bytes across store, plan tables, and
+        blocked tiles). Mirrored to ``delta.compact*`` metrics.
+        """
+        t0 = time.perf_counter()
+        bytes_before = self._host_bytes()
+        pads_before = {f"{kind}/{pods}": ts.pad
+                       for (kind, pods), ts in self._tiers.items()}
+        e_local_before = self.e_local
+        tight, loose = self._tight()
+        dropped = 0
+        if tight and not loose:
+            changed = rebuilt = False
+        elif tight:
+            for p, key in loose:
+                del p.__dict__["_blocked_cache"][key]
+                dropped += 1
+            changed, rebuilt = True, False
+        else:
+            for p in self._plans.values():
+                dropped += len(p.__dict__.get("_blocked_cache") or {})
+            self._rebuild_in_place(
+                self.assignment, self.part, self.edge_index(),
+                self.edge_weights())
+            changed = rebuilt = True
+        report = {
+            "graph_key": self.graph_key,
+            "version": self.version,
+            "changed": changed,
+            "rebuilt": rebuilt,
+            "pad_rows_reclaimed": {
+                key: pads_before[key] - ts.pad
+                for (kind, pods), ts in self._tiers.items()
+                for key in [f"{kind}/{pods}"]},
+            "e_local_before": e_local_before,
+            "e_local_after": self.e_local,
+            "blocked_entries_dropped": dropped,
+            "bytes_reclaimed": bytes_before - self._host_bytes(),
+            "pad_occupancy": self.pad_occupancy(),
+            "compact_ms": (time.perf_counter() - t0) * 1e3,
+        }
+        if _obs_metrics.enabled():
+            from repro.obs.instrument import record_compact_report
+
+            record_compact_report(report)
+        return report
+
+    def pad_occupancy(self) -> dict:
+        """Live occupancy vs padded capacity, per tier and for the edge
+        store — the ``delta.pad_occupancy`` gauge's source. ``frac`` is the
+        overall live/padded slot ratio (1.0 = nothing reclaimable)."""
+        tiers = {}
+        used = cap = 0
+        for (kind, pods), ts in self._tiers.items():
+            occ = max((len(r) for r in ts.ref), default=0)
+            high = max((len(ex) for ex in ts.exports), default=0)
+            tiers[f"{kind}/{pods}"] = {
+                "pad": ts.pad, "occupancy": occ, "high_water": high}
+            used += sum(len(r) for r in ts.ref)
+            cap += self.k * ts.pad
+        cnt_max = int(self._cnt.max(initial=0))
+        used += int(self._cnt.sum())
+        cap += self.k * self.e_local
+        return {
+            "tiers": tiers,
+            "e_local": self.e_local,
+            "e_local_occupancy": cnt_max,
+            "frac": used / cap if cap else 1.0,
+        }
 
     def _remap_class(self, plan: HaloPlan, bm, sm, d_cut, n_cut, nc_cut,
                      class_sel, structural: bool, formula, ppairs) -> int:

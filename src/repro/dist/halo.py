@@ -99,6 +99,8 @@ __all__ = [
     "relocate_node_array",
     "restore_node_array",
     "node_mask",
+    "PlanLayout",
+    "plan_layout",
     "PlanBlockedAdjacency",
     "plan_blocked_adjacency",
     "plan_blocked_shape",
@@ -749,6 +751,39 @@ def node_mask(plan: HaloPlan) -> np.ndarray:
         raise ValueError("plan has no part_sizes (built by an older writer)")
     rows = np.arange(plan.n_local)[None, :]
     return (rows < np.asarray(plan.part_sizes)[:, None]).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanLayout:
+    """Frozen snapshot of JUST a plan's blocked row layout.
+
+    :func:`relocate_node_array` / :func:`restore_node_array` only read
+    ``k / n_local / n_nodes / perm / part_sizes``, so this snapshot is a
+    drop-in "plan" for them. An in-place re-localization
+    (`repro.dist.delta.DeltaPlanner.relocalize`) mutates the live plan
+    objects — a PlanLayout captured beforehand is the only remaining handle
+    on the OLD row order, which is exactly what
+    `repro.train.elastic.relocate_state_tree` needs to carry live per-node
+    state across the swap.
+    """
+
+    k: int
+    n_local: int
+    n_nodes: int
+    perm: np.ndarray
+    part_sizes: np.ndarray
+
+
+def plan_layout(plan) -> PlanLayout:
+    """Snapshot the blocked row layout of a plan — or of anything carrying
+    ``k / n_local / perm / part_sizes`` (a `DeltaPlanner` works). Arrays are
+    copied: the snapshot stays valid after the source is rebuilt in place."""
+    if plan.part_sizes is None:
+        raise ValueError("plan has no part_sizes (built by an older writer)")
+    perm = np.array(plan.perm, np.int64, copy=True)
+    return PlanLayout(
+        k=int(plan.k), n_local=int(plan.n_local), n_nodes=int(perm.shape[0]),
+        perm=perm, part_sizes=np.array(plan.part_sizes, np.int64, copy=True))
 
 
 # =============================================== blocked (BSR) halo adjacency

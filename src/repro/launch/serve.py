@@ -116,21 +116,46 @@ def serve_graph(
     cache_capacity: int = 256,
     n_parts: int = 4,
     seed: int = 0,
+    relocalize_threshold: float = 0.0,
 ) -> None:
     """Serve ``n_queries`` node-classification queries (degree-weighted, so
     hub neighborhoods are hot — the COIN access pattern) and report latency
-    plus hot-neighbor-cache accounting."""
+    plus hot-neighbor-cache accounting.
+
+    With ``relocalize_threshold`` > 0 a churn burst is injected halfway
+    through the stream: each delta goes to both the engine
+    (`apply_graph_delta`, scoped cache invalidation) and a mirrored
+    `DeltaPlanner` whose `RelocalizePolicy` watches drift; when it fires,
+    the engine adopts the re-localized partition (docs/communication.md §8).
+    """
     from repro.serve.graph import hot_query_stream
 
     engine, graph = build_graph_engine(
         spec, batch_seeds=batch_seeds, fanout=fanout,
         cache_capacity=cache_capacity, n_parts=n_parts, seed=seed,
     )
+    planner = None
+    if relocalize_threshold > 0 and engine.partition is not None:
+        from repro.dist.delta import DeltaPlanner, RelocalizePolicy
+
+        planner = DeltaPlanner(
+            engine.partition, graph.edge_index, graph_key="launch-serve",
+            relocalize_policy=RelocalizePolicy(
+                threshold=relocalize_threshold, patience=2, cooldown=3))
     nodes = hot_query_stream(graph, n_queries, seed=seed + 1)
     t0 = time.perf_counter()
-    for v in nodes:
+    half = len(nodes) // 2 if planner is not None else len(nodes)
+    for v in nodes[:half]:
         engine.submit(int(v))
     engine.run_until_drained()
+    if planner is not None:
+        fired = _serve_churn_burst(engine, planner, graph, seed)
+        for v in nodes[half:]:
+            engine.submit(int(v))
+        engine.run_until_drained()
+        drift = planner.locality_drift()["drift_ratio"]
+        print(f"  maintenance: {fired} relocalization(s) over churn burst, "
+              f"residual drift {drift:.3f}")
     dt = time.perf_counter() - t0
     s = engine.export_metrics()       # == stats(), mirrored into the registry
     print(
@@ -152,6 +177,31 @@ def serve_graph(
         )
 
 
+def _serve_churn_burst(engine, planner, graph, seed: int, rounds: int = 8) -> int:
+    """Apply ``rounds`` clustered churn deltas to engine AND planner; adopt
+    the re-localized partition whenever the policy fires. Returns #fires."""
+    from repro.dist.delta import GraphDelta
+
+    churn = np.random.default_rng(seed + 2)
+    fired = 0
+    for _ in range(rounds):
+        ei = planner.edge_index()
+        m = max(ei.shape[1] // 50, 2)
+        drop = churn.choice(ei.shape[1], m, replace=False)
+        mem = churn.choice(graph.n_nodes, 24, replace=False)
+        s = mem[churn.integers(0, mem.size, m)]
+        d = mem[churn.integers(0, mem.size, m)]
+        bad = s == d
+        d[bad] = mem[(np.searchsorted(np.sort(mem), d[bad]) + 1) % mem.size]
+        delta = GraphDelta(edge_inserts=np.stack([s, d]), edge_deletes=ei[:, drop])
+        engine.apply_graph_delta(delta)
+        rep = planner.apply(delta)
+        if rep["relocalized"] is not None:
+            fired += 1
+            engine.adopt_partition(planner.part)
+    return fired
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
@@ -164,6 +214,9 @@ def main(argv=None) -> None:
     ap.add_argument("--cache-capacity", type=int, default=256)
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--parts", type=int, default=4, help="partition-aligned packing parts")
+    ap.add_argument("--relocalize-threshold", type=float, default=0.0,
+                    help="drift ratio beyond which a mid-stream churn burst "
+                         "triggers online re-localization (0 = off; gnn only)")
     add_obs_args(ap)
     args = ap.parse_args(argv)
     spec = get_arch(args.arch)
@@ -178,6 +231,7 @@ def main(argv=None) -> None:
                 batch_seeds=args.batch_seeds, fanout=args.fanout,
                 cache_capacity=0 if args.no_cache else args.cache_capacity,
                 n_parts=args.parts,
+                relocalize_threshold=args.relocalize_threshold,
             )
         else:
             raise SystemExit(

@@ -38,7 +38,7 @@ def _lm_setup(spec, batch=4, seq=64):
     return params, (lambda p, b: lm_loss(p, b, cfg)), batches
 
 
-def _gnn_setup(spec):
+def _gnn_setup(spec, relocalize_threshold: float = 0.0):
     from repro.graph.generators import citation_like
     from repro.launch.steps import _gnn_loss_fn
     from repro.dist.policy import NO_POLICY
@@ -70,9 +70,53 @@ def _gnn_setup(spec):
     loss = _gnn_loss_fn(spec.arch_id, cfg, NO_POLICY)
     params = _init_gnn(spec.arch_id, cfg)
 
+    if relocalize_threshold <= 0:
+        def batches():
+            while True:
+                yield base
+
+        return params, loss, batches
+
+    # --relocalize-threshold: churn the training graph while a
+    # drift-triggered RelocalizePolicy maintains the planner's locality
+    # order online (docs/communication.md §8). Edge COUNT stays constant
+    # (delete m, insert m) so the jitted step never retraces.
+    from repro.core.partition import partition_graph
+    from repro.dist.delta import DeltaPlanner, GraphDelta, RelocalizePolicy
+
+    part = partition_graph(g.n_nodes, g.edge_index, 4, "bfs", seed=0, refine=True)
+    planner = DeltaPlanner(
+        part, g.edge_index, graph_key=f"launch-train-{spec.arch_id}",
+        relocalize_policy=RelocalizePolicy(
+            threshold=relocalize_threshold, patience=2, cooldown=3))
+    churn = np.random.default_rng(1)
+
     def batches():
+        step = 0
         while True:
             yield base
+            step += 1
+            if step % 10:
+                continue
+            ei = planner.edge_index()
+            m = max(ei.shape[1] // 100, 2)
+            drop = churn.choice(ei.shape[1], m, replace=False)
+            mem = churn.choice(g.n_nodes, 16, replace=False)
+            s = mem[churn.integers(0, mem.size, m)]
+            d = mem[churn.integers(0, mem.size, m)]
+            bad = s == d
+            d[bad] = mem[(np.searchsorted(np.sort(mem), d[bad]) + 1) % mem.size]
+            rep = planner.apply(GraphDelta(
+                edge_inserts=np.stack([s, d]), edge_deletes=ei[:, drop]))
+            if rep["relocalized"] is not None:
+                r = rep["relocalized"]
+                print(f"  relocalize @ step {step}: executed tiles "
+                      f"{r['executed_tiles_before']} → {r['executed_tiles_after']}")
+            new_ei = planner.edge_index()
+            base["senders"] = jnp.asarray(new_ei[0].astype(np.int32))
+            base["receivers"] = jnp.asarray(new_ei[1].astype(np.int32))
+            if "edge_weight" in base:
+                base["edge_weight"] = jnp.asarray(planner.edge_weights())
 
     return params, loss, batches
 
@@ -124,13 +168,20 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--relocalize-threshold", type=float, default=0.0,
+                    help="drift ratio beyond which the churned training graph "
+                         "re-localizes online (0 = static graph; gnn only)")
     add_obs_args(ap)
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
     setup = {"lm": _lm_setup, "gnn": _gnn_setup, "recsys": _recsys_setup}[spec.family]
     with obs_session(args):
-        params, loss_fn, batches = setup(spec)
+        if spec.family == "gnn":
+            params, loss_fn, batches = _gnn_setup(
+                spec, relocalize_threshold=args.relocalize_threshold)
+        else:
+            params, loss_fn, batches = setup(spec)
         tr = Trainer(
             loss_fn,
             adamw(args.lr),

@@ -25,6 +25,8 @@ __all__ = [
     "observe_plan_cache",
     "record_blocked",
     "record_delta_report",
+    "record_relocalize_report",
+    "record_compact_report",
     "overlap_timeline",
 ]
 
@@ -125,6 +127,38 @@ def record_delta_report(report: dict) -> None:
         metrics.set_gauge("delta.drift_ratio", d["drift_ratio"])
         metrics.set_gauge("delta.executed_tiles_current", d["executed_tiles_current"])
         metrics.set_gauge("delta.executed_tiles_reordered", d["executed_tiles_reordered"])
+
+
+def record_relocalize_report(report: dict) -> None:
+    """Fold a `repro.dist.delta.DeltaPlanner.relocalize` report into
+    ``delta.relocalize*`` series: a fire counter, the re-localization
+    latency histogram, and the executed-tile counts the fresh order was
+    installed against (before = the drifted layout it replaced)."""
+    if not metrics.enabled():
+        return
+    metrics.inc("delta.relocalizes")
+    if "relocalize_ms" in report:
+        metrics.observe("delta.relocalize_ms", float(report["relocalize_ms"]))
+    metrics.set_gauge("delta.relocalize_tiles_before",
+                      report.get("executed_tiles_before", 0))
+    metrics.set_gauge("delta.relocalize_tiles_after",
+                      report.get("executed_tiles_after", 0))
+
+
+def record_compact_report(report: dict) -> None:
+    """Fold a `repro.dist.delta.DeltaPlanner.compact` report into
+    ``delta.compact*`` series plus the ``delta.pad_occupancy`` gauge (live
+    slots / padded slots across tiers and store — 1.0 after a rebuildful
+    compact, by construction)."""
+    if not metrics.enabled():
+        return
+    metrics.inc("delta.compacts")
+    metrics.inc("delta.pad_bytes_reclaimed",
+                float(max(report.get("bytes_reclaimed", 0), 0)))
+    occ = report.get("pad_occupancy") or {}
+    metrics.set_gauge("delta.pad_occupancy", float(occ.get("frac", 1.0)))
+    if "compact_ms" in report:
+        metrics.observe("delta.compact_ms", float(report["compact_ms"]))
 
 
 def overlap_timeline(plan, feats, mesh, tracer=None, payload: str | None = None,

@@ -744,6 +744,26 @@ class GraphBatcher:
         return {"affected_seeds": int(delta.touched_nodes().size),
                 "residents_before": resident, "residents_dropped": dropped}
 
+    def adopt_partition(self, partition: Partition | None) -> None:
+        """Swap the partition that drives batch packing — the serve side of
+        an online re-localization (`repro.dist.delta.DeltaPlanner.relocalize`).
+
+        NO cache or sampler invalidation is needed, by construction: the
+        `HotNeighborCache` is keyed by ORIGINAL node ids and the
+        `ServeSampler`'s counter-hashed draws are a pure function of
+        ``(node, seed)`` — neither ever sees the planner's row order, so a
+        new node→CE map changes only which pending queries pack together
+        (``_pick_batch``) and the ``foreign_rows`` accounting. Graph
+        MUTATIONS are the separate path (:meth:`apply_graph_delta`, which
+        does run the scoped invalidation); a re-localization mutates no
+        edge. The cache-on == cache-off equivalence across a relocalize is
+        pinned by ``tests/test_relocalize.py``."""
+        if partition is not None and int(partition.n_nodes) != self.graph.n_nodes:
+            raise ValueError(
+                f"partition covers {partition.n_nodes} nodes, graph has "
+                f"{self.graph.n_nodes}")
+        self.partition = partition
+
     def _scoped_invalidate(self, affected: set[int]) -> int:
         """Drop cache residents whose L-hop sampled cone (under the CURRENT
         sampler, L = the entry's deepest cached layer) intersects

@@ -15,7 +15,13 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
-__all__ = ["MeshPlan", "elastic_replan", "reshard_tree", "scale_batch"]
+__all__ = [
+    "MeshPlan",
+    "elastic_replan",
+    "relocate_state_tree",
+    "reshard_tree",
+    "scale_batch",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +86,37 @@ def reshard_tree(tree: Any, mesh, spec_tree: Any) -> Any:
     return jax.tree_util.tree_map(
         put, tree, spec_tree, is_leaf=lambda x: x is None or hasattr(x, "shape")
     )
+
+
+def relocate_state_tree(old_layout: Any, new_plan: Any, tree: Any) -> Any:
+    """Carry live per-node state across an in-place re-localization.
+
+    ``old_layout`` is a `repro.dist.halo.PlanLayout` snapshot taken BEFORE
+    `repro.dist.delta.DeltaPlanner.relocalize` (the relocalize report's
+    ``old_layout``); ``new_plan`` is any plan/layout in the NEW row order.
+    Every leaf whose leading dims match the old blocked shape
+    ``(k, n_local)`` — relocated features, per-node optimizer moments, layer
+    activations — is routed ``restore_node_array(old)`` →
+    ``relocate_node_array(new)``: back to global node order, then into the
+    fresh blocks. The round trip is EXACT (pure gathers, no arithmetic), so
+    a forward pass after relocation is bit-equivalent modulo row order.
+    Leaves of any other shape (dense weights, scalars, None) pass through
+    untouched.
+    """
+    from repro.dist.halo import relocate_node_array, restore_node_array
+
+    old_shape = (int(old_layout.k), int(old_layout.n_local))
+
+    def move(leaf):
+        if leaf is None or not hasattr(leaf, "shape"):
+            return leaf
+        if tuple(np.asarray(leaf).shape[:2]) != old_shape:
+            return leaf
+        return relocate_node_array(
+            new_plan, restore_node_array(old_layout, np.asarray(leaf)))
+
+    return jax.tree_util.tree_map(
+        move, tree, is_leaf=lambda x: x is None or hasattr(x, "shape"))
 
 
 def scale_batch(global_batch: int, old_data_shards: int, new_data_shards: int) -> int:

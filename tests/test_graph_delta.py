@@ -25,6 +25,7 @@ from repro.dist import halo
 from repro.dist.delta import (
     DeltaPlanner,
     GraphDelta,
+    RelocalizePolicy,
     apply_delta_to_graph,
     delta_update_blocked_adjacency,
 )
@@ -146,6 +147,83 @@ def test_delta_200_step_acceptance(delta_seed):
     assert patched > 0, "no blocked table was ever tile-patched"
     assert pl.version == 200
     assert pl.graph_key.endswith("@d200")
+
+
+# ------------------------------------------- maintenance soak + acceptance
+def _w_of(ei):
+    """Weight as a pure function of (u, v): duplicate edge instances share
+    it, so after a re-localization reorders the planner's internal slots a
+    delete can never consume a 'different-weight' duplicate than the numpy
+    oracle does (same trick as the 8-device prelude)."""
+    ei = np.asarray(ei, np.int64)
+    return (0.1 + (ei[0] * 131 + ei[1] * 17) % 97 / 97.0).astype(np.float32)
+
+
+def _maintenance_delta(rng, n, ei, max_ops=8):
+    d = O.random_delta(rng, n, ei, max_ops=max_ops)
+    return dataclasses.replace(d, insert_w=_w_of(d.edge_inserts))
+
+
+@settings(max_examples=4, deadline=None)
+@given(n=st.integers(140, 220), e=st.integers(500, 1000), seed=st.integers(0, 30))
+def test_soak_interleaved_maintenance_random_sequences(n, e, seed):
+    """Soak: random mutation batches interleaved with `compact()` and both
+    FORCED and THRESHOLD-driven re-localizations, the full delta oracle
+    after every single step. Post-relocalize the oracle rebuilds against
+    the planner's OWN (re-localized) partition — plans must stay equal to
+    a from-scratch build at every interleaving point."""
+    g, w, part = _mk(n, e, 4, seed=seed)
+    w = _w_of(g.edge_index)
+    pol = RelocalizePolicy(threshold=1.01, patience=2, cooldown=2, block=32)
+    pl = DeltaPlanner(part, g.edge_index, w, relocalize_policy=pol)
+    plans = [pl.plan(), pl.plan(axes=("pod", "model"), pods=2)]
+    ei, ww = g.edge_index.astype(np.int64), w
+    rng = np.random.default_rng(seed + 17)
+    for step in range(12):
+        act = step % 6
+        if act == 4:
+            pl.compact()
+        elif act == 5:
+            pl.relocalize(block=32)
+            assert pl.locality_drift(32)["drift_ratio"] == 1.0
+        else:
+            d = _maintenance_delta(rng, n, ei, max_ops=8)
+            pl.apply(d)                  # may auto-relocalize via the policy
+            ei, ww = O.apply_delta_to_edges(ei, ww, d)
+        assert pl.n_edges == ei.shape[1]
+        for p in plans:
+            O.assert_plan_matches_rebuild(p, pl.part, ei, ww)
+
+
+def test_delta_200_step_acceptance_with_maintenance(delta_seed):
+    """The ISSUE 9 acceptance twin of the 200-step run: same mutation load,
+    but with the relocalize policy armed and periodic compaction — the
+    oracle must hold after every step, drift must come back to exactly 1.0
+    at each fire, and maintenance must actually have fired."""
+    seed = 2000 + delta_seed
+    n, e, k, blk = 192, 1200, 4, 32
+    g, w, part = _mk(n, e, k, seed=seed % 97)
+    w = _w_of(g.edge_index)
+    pol = RelocalizePolicy(threshold=1.02, patience=3, cooldown=8, block=blk)
+    pl = DeltaPlanner(part, g.edge_index, w, relocalize_policy=pol)
+    plans = [pl.plan(), pl.plan(axes=("pod", "model"), pods=2)]
+    ei, ww = g.edge_index.astype(np.int64), w
+    rng = np.random.default_rng(seed)
+    fired = compacts = 0
+    for step in range(200):
+        if step % 50 == 49:
+            compacts += bool(pl.compact()["changed"])
+        d = _maintenance_delta(rng, n, ei, max_ops=10)
+        rep = pl.apply(d)
+        if rep["relocalized"] is not None:
+            fired += 1
+            assert pl.locality_drift(blk)["drift_ratio"] == 1.0
+        ei, ww = O.apply_delta_to_edges(ei, ww, d)
+        for p in plans:
+            O.assert_plan_matches_rebuild(p, pl.part, ei, ww)
+    assert fired >= 1, "200 uniform-insert steps never crossed the threshold"
+    assert pl.version >= 200 + fired
+    assert pl.n_edges == ei.shape[1]
 
 
 # ------------------------------------------------------ blocked tables (bsr)

@@ -47,6 +47,13 @@ KIND_RULES = {
         "speedup": ("min", 5.0, 0.5),
     },
     "obs": {},
+    "relocal": {
+        # The stale-order decay must stay a real effect (>= 2x the fresh
+        # reorder); the maintained ceiling (<= 1.15x) is asserted inside
+        # benchmarks/relocal_bench.py before the artifact is written.
+        "degraded_ratio": ("min", 2.0, 0.5),
+        "maintained_ratio": ("skip",),
+    },
 }
 
 
