@@ -17,6 +17,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
     args = ap.parse_args(argv)
 
+    from benchmarks.autotune_bench import autotune_rows
     from benchmarks.comm_bench import comm_rows
     from benchmarks.delta_bench import delta_rows
     from benchmarks.obs_bench import obs_rows
@@ -56,6 +57,7 @@ def main(argv=None) -> None:
         ("comm", comm_rows),
         ("delta", delta_rows),
         ("relocal", relocal_rows),
+        ("autotune", autotune_rows),
         ("chips", tbl_chips),
         ("tbl4/6/7", tbl_accel_compare),
         ("kernels", kernel_rows),

@@ -28,6 +28,7 @@ __all__ = [
     "measured_probabilities",
     "refine_partition",
     "bfs_traversal_order",
+    "quotient_graph",
 ]
 
 
@@ -212,12 +213,21 @@ def refine_partition(
     destination is under the balance cap. One vectorized pass over all nodes
     per iteration; conflicts resolved by processing moves in random order with
     capacity bookkeeping.
+
+    Deterministic for a given seed and invariant to the order of the input
+    edge list (the pull matrix is an edge-multiset sum; mover ordering uses a
+    stable gain sort). Greedy commits run against a pull matrix that goes
+    stale as the pass proceeds, so a pass CAN make the cut worse — such a
+    pass is reverted and refinement stops, making the cut monotone
+    non-increasing across passes.
     """
     rng = np.random.default_rng(seed)
     n = assignment.shape[0]
     assignment = assignment.astype(np.int32).copy()
     cap = int(np.ceil(n / k) * (1.0 + balance_slack)) + 1
+    cut_before = int((assignment[src] != assignment[dst]).sum())
     for _ in range(passes):
+        prev = assignment.copy()
         # pull[v, c] = #edges from v into CE c (treat graph as undirected).
         pull = np.zeros((n, k), dtype=np.int32)
         np.add.at(pull, (src, assignment[dst]), 1)
@@ -245,7 +255,44 @@ def refine_partition(
                     moved += 1
         if moved == 0:
             break
+        cut_after = int((assignment[src] != assignment[dst]).sum())
+        if cut_after > cut_before:
+            assignment = prev
+            break
+        cut_before = cut_after
     return assignment
+
+
+def quotient_graph(part: Partition, edge_index: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Contract a partitioned graph to its k-super-node quotient.
+
+    Super-node i is CE/part i. The weight of quotient edge (i, j), i ≠ j, is
+    the number of DEDUPLICATED boundary rows part i exports to part j: the
+    count of distinct source nodes in i that appear on at least one cut edge
+    into j. That is exactly the per-pair quantity the halo plan's export
+    tiers pad and ship (each distinct (source device, source row) pair
+    occupies one slot), so partitioning this quotient minimizes shipped rows
+    rather than raw cut edges.
+
+    Returns ``(q_edge_index, q_weights)``: a (2, Eq) int64 directed edge list
+    over ``part.k`` super-nodes and the matching (Eq,) int64 weights.
+    Self-loops (intra-part edges) are dropped.
+    """
+    k = int(part.k)
+    a = part.assignment.astype(np.int64)
+    src = np.asarray(edge_index[0], dtype=np.int64)
+    dst = np.asarray(edge_index[1], dtype=np.int64)
+    a_s, a_d = a[src], a[dst]
+    cut = a_s != a_d
+    s, dpart = src[cut], a_d[cut]
+    # One boundary row per distinct (source node, destination part) pair.
+    uniq = np.unique(s * k + dpart)
+    q_src = a[uniq // k]
+    q_dst = uniq % k
+    counts = np.bincount(q_src * k + q_dst, minlength=k * k).reshape(k, k)
+    i, j = np.nonzero(counts)
+    q_edge_index = np.stack([i, j]).astype(np.int64)
+    return q_edge_index, counts[i, j].astype(np.int64)
 
 
 def partition_graph(

@@ -84,6 +84,9 @@ ensure_shard_map()
 __all__ = [
     "HaloPlan",
     "build_halo_plan",
+    "validate_pod_map",
+    "pod_map_order",
+    "pod_map_fingerprint",
     "halo_exchange",
     "halo_aggregate",
     "split_halo_aggregate",
@@ -423,6 +426,50 @@ def _group_edges_by_receiver(
     return senders_l, receivers_l, edge_w, e_local
 
 
+def validate_pod_map(pod_map: np.ndarray, k: int, pods: int) -> np.ndarray:
+    """Check a part→pod map is a balanced assignment of k parts to pods.
+
+    Every pod must host exactly ``k // pods`` parts — the halo plan realizes
+    the map by relabeling parts into pod-major device slots, so an
+    unbalanced map has no device raveling. Returns the map as int64.
+    """
+    pm = np.asarray(pod_map, dtype=np.int64)
+    if pm.shape != (k,):
+        raise ValueError(f"pod_map must have shape ({k},), got {pm.shape}")
+    if pm.min() < 0 or pm.max() >= pods:
+        raise ValueError(f"pod_map entries must lie in [0, {pods}), got {pm!r}")
+    sizes = np.bincount(pm, minlength=pods)
+    if np.any(sizes != k // pods):
+        raise ValueError(
+            f"pod_map must place exactly {k // pods} parts per pod, got sizes {sizes!r}"
+        )
+    return pm
+
+
+def pod_map_order(pod_map: np.ndarray, k: int, pods: int) -> np.ndarray:
+    """Device-slot → part order realizing ``pod_map`` pod-major.
+
+    Slot g hosts ``order[g]``; parts mapped to pod q occupy the contiguous
+    slots ``q*k_model .. (q+1)*k_model - 1`` (ties broken by part id), so
+    the mesh's pod-major raveling (device g → pod ``g // k_model``) agrees
+    with the map without any change to device order.
+    """
+    pm = validate_pod_map(pod_map, k, pods)
+    return np.lexsort((np.arange(k), pm))
+
+
+def pod_map_fingerprint(pod_map: np.ndarray | None) -> str:
+    """Short stable hash of a part→pod map for the plan-cache key.
+
+    ``None`` (the contiguous pod-major default) maps to ``"contig"`` so
+    default-mapped plans keep their pre-autotune cache keys byte-identical.
+    """
+    if pod_map is None:
+        return "contig"
+    pm = np.ascontiguousarray(pod_map, dtype=np.int64)
+    return hashlib.sha1(pm.tobytes()).hexdigest()[:16]
+
+
 def build_halo_plan(
     part,
     edge_index: np.ndarray,
@@ -430,6 +477,7 @@ def build_halo_plan(
     *,
     axes: tuple[str, ...] = ("model",),
     pods: int = 1,
+    pod_map: np.ndarray | None = None,
 ) -> HaloPlan:
     """Relocate a :class:`~repro.core.partition.Partition` into a HaloPlan.
 
@@ -446,6 +494,15 @@ def build_halo_plan(
     is remapped against the two-phase halo table documented on
     :class:`HaloPlan`. Hierarchical plans also carry the flat
     ``send_idx``/``s_max`` of the same partition as the accounting baseline.
+
+    pod_map — optional (k,) part→pod assignment from the communication-aware
+    autotuner (``repro.core.autotune``). Default ``None`` keeps the
+    contiguous pod-major grouping (part g → pod ``g // (k/pods)``). A map is
+    realized by RELABELING parts into pod-major device slots (pod q's parts
+    occupy slots ``q*k_model..``); ``perm`` absorbs the relayout, so
+    collectives, meshes, and every consumer see an ordinary hierarchical
+    plan — only which rows land in the deduplicated ``send_rem`` tier
+    changes. Must place exactly ``k // pods`` parts per pod.
     """
     if len(axes) not in (1, 2):
         raise ValueError(f"axes must name 1 or 2 mesh axes, got {axes!r}")
@@ -457,6 +514,13 @@ def build_halo_plan(
     k = int(part.k)
     if pods < 1 or k % pods:
         raise ValueError(f"pods={pods} must divide the partition's k={k}")
+    if pod_map is not None:
+        if len(axes) != 2:
+            raise ValueError("pod_map requires hierarchical axes, e.g. ('pod', 'model')")
+        order = pod_map_order(pod_map, k, pods)
+        rank = np.empty(k, dtype=np.int64)
+        rank[order] = np.arange(k)
+        assignment = rank[assignment]
     n = int(part.n_nodes)
     src = np.asarray(edge_index[0], dtype=np.int64)
     dst = np.asarray(edge_index[1], dtype=np.int64)
@@ -560,12 +624,32 @@ def graph_fingerprint(
     return h.hexdigest()
 
 
+def _hier_key_axes(
+    mesh_axis: "str | tuple[str, ...]", pods: int, pod_map: np.ndarray | None
+) -> object:
+    """The axes component of a plan-cache key.
+
+    Flat plans keep the bare axis name (pre-hierarchy key, unchanged).
+    Hierarchical plans use ``(axes, pods)`` — and, only when a non-default
+    ``pod_map`` is present, ``(axes, pods, pod_map_fingerprint)``: autotuned
+    and default plans of one graph coexist without cross-invalidation, while
+    ``invalidate_halo_plans(graph_key=...)`` still sweeps every flavor (the
+    fingerprint lives inside the axes component, never in ``key[0]``).
+    """
+    if isinstance(mesh_axis, str):
+        return mesh_axis
+    if pod_map is None:
+        return (tuple(mesh_axis), int(pods))
+    return (tuple(mesh_axis), int(pods), pod_map_fingerprint(pod_map))
+
+
 def cached_halo_plan(
     graph_key: str,
     k: int,
     mesh_axis: "str | tuple[str, ...]" = "model",
     *,
     pods: int = 1,
+    pod_map: np.ndarray | None = None,
     builder: Callable[[], HaloPlan],
 ) -> HaloPlan:
     """Memoized plan lookup: ``builder()`` runs only on a cache miss.
@@ -580,9 +664,11 @@ def cached_halo_plan(
     of the same k=8 partition must never collide). Flat and hierarchical
     plans therefore coexist without cross-invalidation. The lazy builder
     matters at scale: on a hit, neither the graph nor the partition needs
-    to exist in memory at all.
+    to exist in memory at all. An autotuned ``pod_map`` joins the key via
+    its fingerprint (see :func:`_hier_key_axes`), so autotuned and default
+    mappings of the same graph coexist too.
     """
-    key_axes = mesh_axis if isinstance(mesh_axis, str) else (tuple(mesh_axis), int(pods))
+    key_axes = _hier_key_axes(mesh_axis, pods, pod_map)
     key = (graph_key, int(k), key_axes)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
@@ -610,6 +696,7 @@ def get_halo_plan(
     mesh_axis: "str | tuple[str, ...]" = "model",
     graph_key: str | None = None,
     pods: int | None = None,
+    pod_map: np.ndarray | None = None,
 ) -> HaloPlan:
     """Cached :func:`build_halo_plan`: same graph/partition/k/axes → same
     object.
@@ -624,6 +711,9 @@ def get_halo_plan(
     ``("pod", mesh_axis)``) or ``mesh_axis=("pod", "model")`` explicitly —
     ``pods`` is then required; the cache key's axes component is the
     (axes, pods) pair, so plans for different pod counts never collide.
+    An autotuned ``pod_map`` (hierarchical only) adds its fingerprint to
+    that component, so tuned and default mappings coexist — and one scoped
+    ``invalidate_halo_plans(graph_key=...)`` still sweeps both.
     """
     if isinstance(mesh_axis, tuple):
         axes = mesh_axis
@@ -638,8 +728,10 @@ def get_halo_plan(
     if graph_key is None:
         graph_key = graph_fingerprint(part.n_nodes, edge_index, w, part.assignment)
     return cached_halo_plan(
-        graph_key, part.k, key_axes, pods=n_pods,
-        builder=lambda: build_halo_plan(part, edge_index, w, axes=axes, pods=n_pods),
+        graph_key, part.k, key_axes, pods=n_pods, pod_map=pod_map,
+        builder=lambda: build_halo_plan(
+            part, edge_index, w, axes=axes, pods=n_pods, pod_map=pod_map
+        ),
     )
 
 
@@ -649,6 +741,7 @@ def register_halo_plan(
     mesh_axis: "str | tuple[str, ...]" = "model",
     *,
     pods: int = 1,
+    pod_map: np.ndarray | None = None,
     plan: HaloPlan,
 ) -> HaloPlan:
     """Install an already-built plan under the cache key the lazy lookups
@@ -660,7 +753,7 @@ def register_halo_plan(
     re-runs the builder. Overwriting an existing entry is allowed (latest
     registration wins) and is not counted as an eviction.
     """
-    key_axes = mesh_axis if isinstance(mesh_axis, str) else (tuple(mesh_axis), int(pods))
+    key_axes = _hier_key_axes(mesh_axis, pods, pod_map)
     _PLAN_CACHE[(graph_key, int(k), key_axes)] = plan
     return plan
 

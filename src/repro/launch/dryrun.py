@@ -213,6 +213,31 @@ def exchange_accounting(cell, shape) -> dict | None:
             inter_pod_bytes_crossing=plan.inter_pod_rows_crossing * d * 4,
             flat_inter_pod_bytes_crossing=plan.flat_inter_pod_rows_crossing * d * 4,
         )
+    # Calibration block: the autotuner's analytic model evaluated on this
+    # cell's own config. Every deterministic comm field above must match its
+    # ``predicted`` twin exactly (the autotuner searches with the same
+    # formulas this accounting measures — pinned in tests/test_autotune.py).
+    from repro.core.autotune import CandidateConfig, comm_stats_from_plan, predict_config_cost
+
+    bsr = getattr(cell, "bsr_stats", None) or {}
+    if "interior" in bsr:  # split record: per-half tables (overlap schedule)
+        nnz_blocks = bsr["interior"]["nnz_blocks"] + bsr["boundary"]["nnz_blocks"]
+        block = int(bsr["interior"]["block"])
+    else:
+        nnz_blocks = bsr.get("nnz_blocks")
+        block = int(bsr.get("block", 128))
+    cfg = CandidateConfig(
+        pods=plan.n_pods,
+        block=block,
+        backend="bsr" if bsr else "segment",
+        payload=payload,
+        overlap=overlap,
+    )
+    out["predicted"] = predict_config_cost(
+        cfg, comm_stats_from_plan(plan), d_feat=d, n_nodes=plan.n_nodes,
+        nnz_blocks=nnz_blocks,
+        n_edges=int((plan.edge_w > 0).sum()),
+    )
     return out
 
 
@@ -369,8 +394,19 @@ def main(argv=None) -> int:
                          "records, no tag suffix); 'bf16'/'int8' quantize the "
                          "boundary rows on the wire and record under a "
                          "'+bf16'/'+int8' mesh tag. Halo GNN cells only.")
+    ap.add_argument("--autotune-config", default=None,
+                    help="JSON emitted by repro.launch.autotune --out; applies "
+                         "the chosen config's payload/backend/mesh knobs "
+                         "(overriding --payload/--optimized/--mesh) so a "
+                         "tuned config flows straight into the sweep.")
     add_obs_args(ap)
     args = ap.parse_args(argv)
+    if args.autotune_config:
+        with open(args.autotune_config) as f:
+            tuned = json.load(f)["config"]
+        args.payload = tuned.get("payload") or "fp32"
+        args.optimized = tuned.get("backend") == "bsr"
+        args.mesh = "multi" if tuned.get("pods", 1) > 1 else "single"
     # "halo" is the default schedule: map both spellings to comm=None so the
     # identical computation never gets cached twice under different tags.
     comm = "broadcast" if args.comm == "broadcast" else None

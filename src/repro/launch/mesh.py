@@ -31,10 +31,22 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_halo_mesh(pods: int, devices_per_pod: int):
+def make_halo_mesh(pods: int, devices_per_pod: int, *, pod_map=None):
     """2-D (pod, model) mesh for hierarchical halo exchange — e.g. the
     8-device 2×4 acceptance mesh. Devices are raveled pod-major, matching
-    the device→(pod, member) grouping ``build_halo_plan`` assumes."""
+    the device→(pod, member) grouping ``build_halo_plan`` assumes.
+
+    pod_map — optional autotuned part→pod assignment (the
+    ``repro.core.autotune`` quotient mapper). Validated here for balance,
+    but REALIZED by the plan, not the mesh: ``build_halo_plan(...,
+    pod_map=...)`` relabels parts into pod-major device slots, so the mesh's
+    device raveling never changes and any plan (default- or autotuned-map)
+    runs on the same mesh object. Pass the same map to both so validation
+    happens at mesh-construction time, before any compile."""
+    if pod_map is not None:
+        from repro.dist.halo import validate_pod_map
+
+        validate_pod_map(pod_map, pods * devices_per_pod, pods)
     return jax.make_mesh((pods, devices_per_pod), ("pod", "model"))
 
 
